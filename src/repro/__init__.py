@@ -1,0 +1,5 @@
+"""repro — production-grade JAX reproduction of SSV (Sparse Speculative
+Verification for Efficient LLM Inference) with a multi-architecture model
+zoo, Pallas TPU verification kernels, a fault-tolerant distributed runtime,
+and a 512-chip multi-pod dry-run + roofline methodology."""
+__version__ = "1.0.0"

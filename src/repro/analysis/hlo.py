@@ -1,0 +1,336 @@
+"""Optimized-HLO text analyzer with while-loop trip-count correction.
+
+``compiled.cost_analysis()`` counts every instruction ONCE — scan bodies are
+not multiplied by their trip counts (verified empirically on the CPU
+backend), so a layer-scanned model under-reports FLOPs by ~L×. This module
+re-walks the optimized HLO text:
+
+  * computations are parsed into op lists;
+  * the call graph is traversed from ENTRY with a multiplier; ``while`` ops
+    multiply by their ``backend_config known_trip_count`` (present in XLA's
+    optimized HLO); fusions/calls recurse at the same multiplier;
+  * dot FLOPs are computed from operand shapes + contracting dims;
+  * collective wire bytes are accumulated per collective type with
+    replica-group-aware ring scaling;
+  * HBM-bytes proxy: sum of (operand + result) bytes of non-trivial ops at
+    top fusion granularity (XLA's fusion model keeps intermediates on-chip).
+
+This powers the §Roofline terms in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def parse_shape(s: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return "opaque", ()
+    dtype = m.group(1)
+    dims = tuple(int(x) for x in m.group(2).split(",") if x) if m.group(2) else ()
+    return dtype, dims
+
+
+def shape_bytes(s: str) -> int:
+    dtype, dims = parse_shape(s)
+    n = 1
+    for d in dims:
+        n *= d
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _tuple_shapes(text: str) -> List[str]:
+    """Split a (possibly tuple) result type into element type strings."""
+    text = text.strip()
+    if text.startswith("("):
+        depth = 0
+        parts, cur = [], []
+        for ch in text[1:-1]:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append("".join(cur))
+                cur = []
+            else:
+                cur.append(ch)
+        if cur:
+            parts.append("".join(cur))
+        return parts
+    return [text]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    operand_names: List[str]
+    attrs: str
+    called: List[str]           # computation names referenced
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symbols: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def operand_types(self, op: Op) -> List[str]:
+        return [self.symbols.get(n, "opaque[]") for n in op.operand_names]
+
+
+# result type: either a tuple (balanced at depth 1 — layouts use braces, not
+# parens) or a single shape with optional layout annotation
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        line = _COMMENT_RE.sub("", line)  # strip /*index=N*/ tuple comments
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped and "=" not in \
+                stripped.split("->")[0]:
+            head = stripped.split("(")[0].strip()
+            is_entry = head.startswith("ENTRY")
+            name = head.replace("ENTRY", "").strip().lstrip("%")
+            if name:
+                cur = Computation(name=name, ops=[])
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, kind, operands, attrs = m.groups()
+        operand_names = [x.lstrip("%") for x in re.findall(
+            r"%?([\w\.\-]+)", operands)
+            if not re.match(r"^[a-z0-9]+\[", x)]
+        # simpler robust operand-name parse: split top-level commas, last token
+        operand_names = []
+        depth = 0
+        curtok = []
+        for ch in operands + ",":
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                tok = "".join(curtok).strip()
+                if tok:
+                    operand_names.append(tok.split()[-1].lstrip("%"))
+                curtok = []
+            else:
+                curtok.append(ch)
+        called = re.findall(r"(?:to_apply|calls|body|condition)=%?([\w\.\-]+)",
+                            attrs)
+        m2 = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+        if m2:
+            called.extend(x.strip().lstrip("%") for x in m2.group(1).split(","))
+        cur.ops.append(Op(name=name, kind=kind, result_type=rtype,
+                          operand_names=operand_names, attrs=attrs,
+                          called=called))
+        cur.symbols[name] = rtype
+    return comps, entry
+
+
+def _trip_count(op: Op) -> int:
+    m = re.search(r'known_trip_count[^0-9]*"?n"?\s*[:=]\s*"?(\d+)"?', op.attrs)
+    return int(m.group(1)) if m else 1
+
+
+def _dot_flops(op: Op, comp: "Computation") -> float:
+    """2 * prod(result dims) * contracted size (batch dims handled by result)."""
+    _, rdims = parse_shape(op.result_type if not op.result_type.startswith("(")
+                           else _tuple_shapes(op.result_type)[0])
+    optypes = comp.operand_types(op)
+    if not optypes:
+        return 0.0
+    _, ldims = parse_shape(optypes[0])
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    csize = 1
+    if m and ldims:
+        for d in m.group(1).split(","):
+            if d:
+                csize *= ldims[int(d)]
+    rsize = 1
+    for d in rdims:
+        rsize *= d
+    return 2.0 * rsize * csize
+
+
+def _conv_flops(op: Op, comp: "Computation") -> float:
+    # rough: 2 * output size * (kernel spatial * in_channels)
+    _, rdims = parse_shape(op.result_type)
+    optypes = comp.operand_types(op)
+    if len(optypes) < 2:
+        return 0.0
+    _, kdims = parse_shape(optypes[1])
+    rsize = 1
+    for d in rdims:
+        rsize *= d
+    ksize = 1
+    for d in kdims[:-1]:
+        ksize *= d
+    return 2.0 * rsize * ksize
+
+
+def _group_size(op: Op, total: int) -> int:
+    """Parse replica_groups=[G,S]<=[N] (iota) or explicit {{..},..} groups."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", op.attrs)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return total
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    collective_wire_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in COLLECTIVES})
+    per_op_flops: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.collective_wire_bytes.values())
+
+
+def analyze(text: str, num_devices: int = 1) -> Analysis:
+    """Walk the optimized HLO from ENTRY, multiplying while bodies by their
+    known trip counts. All quantities are PER-MODULE (i.e. per device for an
+    SPMD module)."""
+    comps, entry = parse_module(text)
+    out = Analysis()
+    seen_stack: List[str] = []
+
+    def visit(comp_name: str, mult: float):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen_stack:
+            return
+        seen_stack.append(comp_name)
+        for op in comp.ops:
+            kind = op.kind
+            if kind == "while":
+                tc = _trip_count(op)
+                body = [c for c in op.called if "region" in c or "body" in c.lower()
+                        or c in comps]
+                # body/condition both referenced; visit each with multiplier
+                m_body = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+                m_cond = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+                if m_body:
+                    visit(m_body.group(1), mult * tc)
+                if m_cond:
+                    visit(m_cond.group(1), mult * tc)
+                continue
+            if kind in ("fusion", "call", "conditional", "map", "reduce",
+                        "reduce-window", "scatter", "sort", "custom-call",
+                        "select-and-scatter", "all-reduce"):
+                for c in op.called:
+                    visit(c, mult)
+            if kind == "dot":
+                f = _dot_flops(op, comp) * mult
+                out.flops += f
+                out.per_op_flops[f"{comp_name}/{op.name}"] = f
+            elif kind == "convolution":
+                out.flops += _conv_flops(op, comp) * mult
+            base = kind.split("-start")[0]
+            if base in COLLECTIVES:
+                size = sum(shape_bytes(t) for t in comp.operand_types(op))
+                if base == "all-gather":
+                    size = sum(shape_bytes(t) for t in _tuple_shapes(op.result_type))
+                g = _group_size(op, num_devices)
+                wire = {
+                    "all-gather": size * (g - 1) / max(g, 1),
+                    "all-reduce": 2.0 * size * (g - 1) / max(g, 1),
+                    "reduce-scatter": size * (g - 1) / max(g, 1),
+                    "all-to-all": size * (g - 1) / max(g, 1),
+                    "collective-permute": float(size),
+                }[base]
+                out.collective_bytes[base] += size * mult
+                out.collective_wire_bytes[base] += wire * mult
+                out.collective_counts[base] += int(mult)
+            # HBM proxy: top-level data movement with op-aware semantics —
+            # slicing ops touch only the slice, in-place updates (dus, and
+            # fusions wrapping a dus into an aliased buffer) touch only the
+            # update window, broadcasts write only their result.
+            optypes = comp.operand_types(op)
+            rbytes = sum(shape_bytes(t) for t in _tuple_shapes(op.result_type))
+            io_bytes = None
+            if kind in ("dynamic-slice", "gather"):
+                io_bytes = 2.0 * rbytes              # read slice + write result
+            elif kind in ("dynamic-update-slice",):
+                upd = shape_bytes(optypes[1]) if len(optypes) > 1 else rbytes
+                io_bytes = 2.0 * upd                 # read + write the window
+            elif kind in ("scatter",):
+                upd = shape_bytes(optypes[-1]) if optypes else rbytes
+                io_bytes = 2.0 * upd
+            elif kind in ("broadcast", "iota", "constant"):
+                io_bytes = rbytes
+            elif kind == "fusion":
+                io_bytes = sum(shape_bytes(t) for t in optypes) + rbytes
+                inner = comps.get(op.called[0]) if op.called else None
+                if inner is not None:
+                    dus_upd = [shape_bytes(inner.symbols.get(o.operand_names[1],
+                                                             "opaque[]"))
+                               for o in inner.ops
+                               if o.kind == "dynamic-update-slice" and
+                               len(o.operand_names) > 1]
+                    if dus_upd:
+                        # aliased accumulator: charge the window, not the buffer
+                        alias = max((shape_bytes(t) for t in optypes
+                                     if t.split("{")[0] ==
+                                     op.result_type.split("{")[0]), default=0)
+                        io_bytes = io_bytes - alias - rbytes + 2.0 * max(dus_upd)
+                        io_bytes = max(io_bytes, 2.0 * max(dus_upd))
+            elif kind in ("dot", "convolution", "custom-call", "copy",
+                          "reduce", "transpose", "concatenate") or \
+                    kind.split("-start")[0] in COLLECTIVES:
+                io_bytes = sum(shape_bytes(t) for t in optypes) + rbytes
+            if io_bytes is not None:
+                out.hbm_bytes += io_bytes * mult
+        seen_stack.pop()
+
+    if entry:
+        visit(entry, 1.0)
+    return out

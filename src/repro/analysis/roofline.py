@@ -1,0 +1,137 @@
+"""Roofline model for TPU v5e (the target platform).
+
+Hardware constants (per chip):
+  peak bf16 compute : 197 TFLOP/s
+  HBM bandwidth     : 819 GB/s
+  ICI link bandwidth: ~50 GB/s/link (per direction); a v5e chip has 2 links
+                      per torus axis — we charge collectives against ONE
+                      axis's links (conservative single-axis model) and
+                      report the per-device wire bytes from the HLO walk.
+
+Terms per (arch × shape × mesh), all in seconds per step:
+  compute    = HLO_FLOPs_per_device / peak
+  memory     = HLO_bytes_per_device / hbm_bw
+  collective = wire_bytes_per_device / ici_bw
+
+The dominant term is the bottleneck; roofline fraction for the perf score is
+  useful_model_flops_time / max(compute, memory, collective)
+where useful_model_flops uses 6·N·D (dense train), 6·N_active·D (MoE), and
+2·N·B per generated token for decode shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.analysis.hlo import Analysis
+from repro.config import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+ICI_LINKS = 2                # links per torus axis on v5e
+HBM_PER_CHIP = 16 * 1024**3  # 16 GiB
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    num_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_per_dev: float
+    hbm_bytes_per_dev: float
+    wire_bytes_per_dev: float
+    bytes_per_dev_peak: float      # from memory_analysis (argument+output+temp)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops across all devices): how much compiled
+        compute is 'useful' — catches remat/dispatch overhead."""
+        total = self.hlo_flops_per_dev * self.num_devices
+        return self.model_flops / total if total > 0 else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chips' peak FLOP/s the step achieves on USEFUL
+        model flops — the §Perf score."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / t) / (PEAK_FLOPS * self.num_devices)
+
+    @property
+    def fits_hbm(self) -> bool:
+        return self.bytes_per_dev_peak <= HBM_PER_CHIP
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "devices": self.num_devices,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_dev": self.hlo_flops_per_dev,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "bytes_per_dev": self.bytes_per_dev_peak,
+            "fits_hbm": self.fits_hbm,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful model FLOPs per step: 6·N·D train (N = active params), plus the
+    attention term; decode: 2·N·B per emitted token + attention reads."""
+    n_active = cfg.active_param_count()
+    L, H, Dh = cfg.num_layers, cfg.num_heads, cfg.head_dim
+    if shape.kind in ("train", "prefill"):
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0 if shape.kind == "train" else 2.0
+        base = mult * n_active * tokens
+        # causal attention: mult·B·L·H·Dh·S²/2 (fwd 2x ops qk+pv)
+        attn = mult * shape.global_batch * L * H * Dh * shape.seq_len ** 2 / 2 \
+            if cfg.attention != "nsa" else \
+            mult * shape.global_batch * L * H * Dh * shape.seq_len * (
+                cfg.nsa.n_selected * cfg.nsa.sel_block + cfg.nsa.window +
+                shape.seq_len // cfg.nsa.cmp_stride)
+        return base + attn
+    # decode: one token per sequence
+    base = 2.0 * n_active * shape.global_batch
+    if cfg.attention == "nsa":
+        ctx = (cfg.nsa.n_selected * cfg.nsa.sel_block + cfg.nsa.window +
+               shape.seq_len // cfg.nsa.cmp_stride)
+    else:
+        ctx = shape.seq_len
+    attn = 4.0 * shape.global_batch * L * H * Dh * ctx
+    return base + attn
+
+
+def build(arch: str, shape: ShapeConfig, mesh_name: str, num_devices: int,
+          cfg: ModelConfig, hlo_analysis: Analysis, mem_bytes_per_dev: float,
+          axis_group_hint: Optional[int] = None) -> Roofline:
+    compute_s = hlo_analysis.flops / PEAK_FLOPS
+    memory_s = hlo_analysis.hbm_bytes / HBM_BW
+    collective_s = hlo_analysis.total_wire_bytes / (ICI_BW * ICI_LINKS)
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, num_devices=num_devices,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=model_flops(cfg, shape),
+        hlo_flops_per_dev=hlo_analysis.flops,
+        hbm_bytes_per_dev=hlo_analysis.hbm_bytes,
+        wire_bytes_per_dev=hlo_analysis.total_wire_bytes,
+        bytes_per_dev_peak=mem_bytes_per_dev)

@@ -1,0 +1,7 @@
+from repro.ckpt.checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    gc_old,
+    latest_step,
+    restore,
+    save,
+)

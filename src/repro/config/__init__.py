@@ -1,0 +1,25 @@
+from repro.config.base import (
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    NSAConfig,
+    RecurrentConfig,
+    ServeConfig,
+    ShapeConfig,
+    SHAPES,
+    SSVConfig,
+    TrainConfig,
+)
+
+__all__ = [
+    "MeshConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "NSAConfig",
+    "RecurrentConfig",
+    "ServeConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "SSVConfig",
+    "TrainConfig",
+]

@@ -1,0 +1,11 @@
+"""SSV core: the paper's primary contribution.
+
+tree     — rooted draft-tree topologies, BFS/DFS flattening, tree masks
+draft    — draft model config + tree expansion
+accept   — greedy + stochastic (SpecInfer-style) tree acceptance
+overlap  — cross-query overlap stats, merged-schedule / shared-index builders
+engine   — the draft -> sparse-verify -> accept serving loop
+planner  — profile-guided prompt-adaptive orchestration (Algorithm 1)
+schedule — IndexCache-style refresh/reuse greedy calibration
+"""
+from repro.core import accept, draft, engine, overlap, planner, schedule, tree  # noqa: F401

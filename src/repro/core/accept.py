@@ -1,0 +1,130 @@
+"""Speculative accept/reject over draft trees.
+
+Two rules, both host-side (gamma <= 128 — the per-step cost is negligible and
+keeping the dynamic control flow off-device mirrors production engines):
+
+* greedy (temperature 0): walk from the root; a child is accepted iff its
+  token equals the target argmax at its parent's context. The bonus token is
+  the target argmax at the deepest accepted node.
+
+* stochastic (SpecInfer/EAGLE multi-round rejection sampling): preserves the
+  target distribution exactly for any draft distribution q — children are
+  tried in order; child c with token t is accepted w.p. min(1, p(t)/q(t));
+  on rejection p <- normalize(max(p - q, 0)). If all children are rejected,
+  the bonus is sampled from the residual.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.tree import TreeTopology
+
+
+@dataclasses.dataclass
+class AcceptResult:
+    path: np.ndarray        # (n_accepted + 1,) node indices incl. root, root-to-leaf
+    tokens: np.ndarray      # (n_accepted + 1,) accepted draft tokens + bonus token
+    bonus: int
+    n_accepted: int         # accepted DRAFT nodes (path length minus the root)
+
+
+def children_lists(topo: TreeTopology) -> List[List[int]]:
+    ch: List[List[int]] = [[] for _ in range(topo.num_nodes + 1)]
+    for i, p in enumerate(topo.parents):
+        ch[p + 1].append(i)
+    return ch
+
+
+def greedy_tree_accept(topo: TreeTopology, draft_tokens: np.ndarray,
+                       verify_logits: np.ndarray) -> AcceptResult:
+    """draft_tokens: (T,) node tokens (node 0 = pending root, always
+    accepted); verify_logits: (T, V) target logits at each node. The walk
+    starts at the root using its own verify logits — the target's prediction
+    after processing the pending token."""
+    ch = children_lists(topo)
+    cur = 0
+    logits = verify_logits[0]
+    path: List[int] = [0]
+    toks: List[int] = []
+    while True:
+        best = int(np.argmax(logits))
+        nxt = None
+        for c in ch[cur + 1]:
+            if int(draft_tokens[c]) == best:
+                nxt = c
+                break
+        if nxt is None:
+            break
+        path.append(nxt)
+        toks.append(int(draft_tokens[nxt]))
+        logits = verify_logits[nxt]
+        cur = nxt
+    bonus = int(np.argmax(logits))
+    return AcceptResult(path=np.array(path, np.int64),
+                        tokens=np.array(toks + [bonus], np.int64),
+                        bonus=bonus, n_accepted=len(path) - 1)
+
+
+def _softmax(x: np.ndarray, temperature: float = 1.0) -> np.ndarray:
+    x = x.astype(np.float64) / max(temperature, 1e-6)
+    x = x - x.max()
+    e = np.exp(x)
+    return e / e.sum()
+
+
+def stochastic_tree_accept(topo: TreeTopology, draft_tokens: np.ndarray,
+                           verify_logits: np.ndarray, node_q: np.ndarray,
+                           rng: np.random.Generator,
+                           temperature: float = 1.0) -> AcceptResult:
+    """SpecInfer-style multi-round rejection sampling over a rooted tree.
+
+    node_q: (T, V) draft distribution *at* each node (the distribution its
+    children were drawn from). Output tokens are distributed exactly as the
+    target model's.
+    """
+    ch = children_lists(topo)
+    cur = 0
+    p = _softmax(verify_logits[0], temperature)
+    q = node_q[0]
+    path: List[int] = [0]
+    toks: List[int] = []
+    while True:
+        accepted = None
+        p_res = p.copy()
+        for c in ch[cur + 1]:
+            t = int(draft_tokens[c])
+            qt = max(float(q[t]), 1e-12)
+            if rng.uniform() < min(1.0, float(p_res[t]) / qt):
+                accepted = c
+                break
+            p_res = np.maximum(p_res - q, 0.0)
+            s = p_res.sum()
+            p_res = p_res / s if s > 0 else np.full_like(p_res, 1.0 / len(p_res))
+        if accepted is None:
+            bonus = int(rng.choice(len(p_res), p=p_res / p_res.sum()))
+            return AcceptResult(path=np.array(path, np.int64),
+                                tokens=np.array(toks + [bonus], np.int64),
+                                bonus=bonus, n_accepted=len(path) - 1)
+        path.append(accepted)
+        toks.append(int(draft_tokens[accepted]))
+        p = _softmax(verify_logits[accepted], temperature)
+        q = node_q[accepted]
+        cur = accepted
+        if not ch[cur + 1]:
+            bonus = int(rng.choice(len(p), p=p))
+            return AcceptResult(path=np.array(path, np.int64),
+                                tokens=np.array(toks + [bonus], np.int64),
+                                bonus=bonus, n_accepted=len(path) - 1)
+
+
+def pad_path(path: np.ndarray, pad_to: int) -> np.ndarray:
+    """Pad a root-to-leaf accepted path (root included, so len >= 1) to a
+    static length for jitted commit: padding repeats the last entry."""
+    out = np.zeros((pad_to,), np.int64)
+    k = min(len(path), pad_to)
+    out[:k] = path[:k]
+    out[k:] = path[k - 1]
+    return out

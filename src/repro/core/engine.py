@@ -1,0 +1,211 @@
+"""SSVEngine — the end-to-end draft → sparse-verify → accept serving loop
+(paper Fig. 3), with pluggable verification strategy (θ_d, θ_s), precision
+class P, and planner-driven prompt adaptation.
+
+Per generation step:
+  1. the planner supplies the active strategy (tree shape, traversal,
+     grouping, refresh/reuse schedule);
+  2. the draft model expands a rooted token tree under the pending token;
+  3. the target verifies all nodes in one tree-masked pass — NSA layers run
+     the refresh/reuse schedule and exact/approx grouped selection;
+  4. host-side accept/reject picks the longest valid path + a bonus token;
+  5. both models commit the accepted path's K/V (or recurrent states);
+  6. step statistics (A_t, T_t) feed the planner's runtime guard.
+
+All device computations are jitted and cached per (config, strategy, tree
+topology) — fixed shapes, no recompilation inside a generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig, SSVConfig
+from repro.core import accept as accept_lib
+from repro.core import draft as draft_lib
+from repro.core.tree import TreeTopology, build_topology, positions_for
+from repro.models import model
+
+
+# ------------------------------------------------------------ jit caches
+@functools.lru_cache(maxsize=64)
+def jit_verify(cfg: ModelConfig, ssv: Optional[SSVConfig]):
+    def f(params, caches, tokens, positions, tmask, parents):
+        return model.verify_step(params, cfg, caches, tokens, positions, tmask,
+                                 parents, ssv)
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=64)
+def jit_commit(cfg: ModelConfig):
+    def f(params, caches, updates, accepted, n_accepted):
+        return model.commit(params, cfg, caches, updates, accepted, n_accepted)
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=64)
+def jit_prefill(cfg: ModelConfig, max_len: int):
+    def f(params, tokens):
+        return model.prefill(params, cfg, tokens, max_len)
+    return jax.jit(f)
+
+
+@dataclasses.dataclass
+class StepStats:
+    accepted: int          # draft tokens accepted (A_t excludes the bonus)
+    emitted: int           # new tokens emitted this step (accepted + 1 bonus)
+    latency_s: float       # T_t
+    gamma: int             # draft tokens verified
+    strategy: SSVConfig
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray
+    steps: List[StepStats]
+
+    @property
+    def accepted_token_throughput(self) -> float:
+        tot_t = sum(s.latency_s for s in self.steps)
+        tot_e = sum(s.emitted for s in self.steps)
+        return tot_e / tot_t if tot_t > 0 else 0.0
+
+    @property
+    def mean_accepted(self) -> float:
+        return float(np.mean([s.accepted for s in self.steps])) if self.steps else 0.0
+
+
+class SSVEngine:
+    """Single-sequence (B=1 per stream) speculative serving engine."""
+
+    def __init__(self, target_params, target_cfg: ModelConfig, draft_params,
+                 draft_cfg: ModelConfig, serve_cfg: ServeConfig, planner=None,
+                 rng_seed: int = 0):
+        self.tp, self.tcfg = target_params, target_cfg
+        self.dp, self.dcfg = draft_params, draft_cfg
+        self.serve = serve_cfg
+        self.planner = planner
+        self.rng = np.random.default_rng(rng_seed)
+        self.t_caches = None
+        self.d_caches = None
+        self.pending: Optional[int] = None
+        self.prompt_len = 0
+
+    # -------------------------------------------------------------- setup
+    def start(self, prompt_tokens: np.ndarray):
+        """prompt_tokens: (S,) — prefill both models; the last prompt token
+        becomes the pending root of the first tree."""
+        toks = jnp.asarray(prompt_tokens, jnp.int32)[None]
+        max_len = self.serve.max_context
+        # prefill everything except the last token — it becomes the pending root
+        _, self.t_caches = jit_prefill(self.tcfg, max_len)(self.tp, toks[:, :-1])
+        _, self.d_caches = jit_prefill(self.dcfg, max_len)(self.dp, toks[:, :-1])
+        self.pending = int(prompt_tokens[-1])
+        self.prompt_len = len(prompt_tokens)
+        if self.planner is not None:
+            self.planner.begin_request(context_len=self.prompt_len)
+
+    # -------------------------------------------------------------- one step
+    def step(self, strategy: Optional[SSVConfig] = None) -> Tuple[List[int], StepStats]:
+        ssv = strategy or (self.planner.current() if self.planner else self.serve.ssv)
+        topo = build_topology(ssv.tree_depth, ssv.tree_width, ssv.traversal,
+                              ssv.tree_budget)
+        t0 = time.perf_counter()
+        pending = jnp.asarray([self.pending], jnp.int32)
+
+        dverify = jit_verify(self.dcfg, None)
+        tokens, node_q, d_updates = draft_lib.expand_tree(
+            lambda caches, tk, pos, tm, par: dverify(self.dp, caches, tk, pos, tm, par),
+            self.dcfg, self.d_caches, topo, pending,
+            temperature=self.serve.temperature)
+
+        T = topo.num_nodes
+        prefix = self.t_caches["length"]
+        positions = (jnp.asarray(positions_for(topo, 0))[None] + prefix).astype(jnp.int32)
+        tmask = jnp.asarray(topo.mask)[None]
+        parents = jnp.asarray(topo.parents)
+        tverify = jit_verify(self.tcfg, ssv)
+        logits, t_updates = tverify(self.tp, self.t_caches, tokens, positions,
+                                    tmask, parents)
+
+        logits_np = np.asarray(logits[0], np.float32)
+        tokens_np = np.asarray(tokens[0])
+        if self.serve.temperature == 0.0:
+            res = accept_lib.greedy_tree_accept(topo, tokens_np, logits_np)
+        else:
+            res = accept_lib.stochastic_tree_accept(
+                topo, tokens_np, logits_np, np.asarray(node_q[0], np.float32),
+                self.rng, self.serve.temperature)
+
+        pad_to = int(topo.depths.max()) + 1
+        path = jnp.asarray(accept_lib.pad_path(res.path, pad_to))[None]
+        n_acc = jnp.asarray([res.n_accepted + 1], jnp.int32)  # +1: pending root
+        self.t_caches = jit_commit(self.tcfg)(self.tp, self.t_caches, t_updates,
+                                              path, n_acc)
+        self.d_caches = jit_commit(self.dcfg)(self.dp, self.d_caches, d_updates,
+                                              path, n_acc)
+        self.pending = res.bonus
+        dt = time.perf_counter() - t0
+        stats = StepStats(accepted=res.n_accepted, emitted=res.n_accepted + 1,
+                          latency_s=dt, gamma=T - 1, strategy=ssv)
+        if self.planner is not None:
+            self.planner.observe(accepted=res.n_accepted, latency_s=dt)
+        return list(res.tokens), stats
+
+    # -------------------------------------------------------------- generate
+    def generate(self, prompt_tokens: np.ndarray, max_new_tokens: int = 0,
+                 eos_id: int = -1) -> GenerationResult:
+        max_new = max_new_tokens or self.serve.max_new_tokens
+        self.start(np.asarray(prompt_tokens))
+        out: List[int] = []
+        steps: List[StepStats] = []
+        while len(out) < max_new:
+            new_toks, st = self.step()
+            steps.append(st)
+            for t in new_toks:
+                out.append(int(t))
+                if t == eos_id or len(out) >= max_new:
+                    break
+            if out and out[-1] == eos_id:
+                break
+            if int(self.t_caches["length"]) + 2 * (st.gamma + 2) >= self.serve.max_context:
+                break
+        return GenerationResult(tokens=np.asarray(out), steps=steps)
+
+
+# ------------------------------------------------------------ baselines
+def autoregressive_decode(params, cfg: ModelConfig, prompt_tokens: np.ndarray,
+                          max_new_tokens: int, max_context: int,
+                          temperature: float = 0.0, seed: int = 0) -> GenerationResult:
+    """Plain decode loop (the paper's 49 tok/s NSA baseline shape)."""
+    toks = jnp.asarray(prompt_tokens, jnp.int32)[None]
+    # prefill all but the last prompt token; the first decode step processes it
+    _, caches = jit_prefill(cfg, max_context)(params, toks[:, :-1])
+    step = jax.jit(lambda p, c, t: model.decode_step(p, cfg, c, t))
+    rng = np.random.default_rng(seed)
+    cur = jnp.asarray([[int(prompt_tokens[-1])]], jnp.int32)
+    out: List[int] = []
+    steps: List[StepStats] = []
+    for _ in range(max_new_tokens):
+        t0 = time.perf_counter()
+        logits, caches = step(params, caches, cur)
+        lg = np.asarray(logits[0, 0], np.float32)
+        if temperature == 0.0:
+            nxt = int(lg.argmax())
+        else:
+            p = np.exp((lg - lg.max()) / temperature)
+            nxt = int(rng.choice(len(p), p=p / p.sum()))
+        dt = time.perf_counter() - t0
+        out.append(nxt)
+        steps.append(StepStats(accepted=0, emitted=1, latency_s=dt, gamma=0,
+                               strategy=None))
+        cur = jnp.asarray([[nxt]], jnp.int32)
+        if int(caches["length"]) + 2 >= max_context:
+            break
+    return GenerationResult(tokens=np.asarray(out), steps=steps)

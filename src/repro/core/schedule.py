@@ -1,0 +1,52 @@
+"""Refresh/reuse schedule calibration — training-free IndexCache-style greedy
+search (paper §5.2, Table 1 footnote).
+
+Given a target model and a calibration batch, greedily grow the set of REUSE
+layers: at each round, tentatively add each remaining candidate layer and
+measure the output-logit KL divergence against the all-refresh baseline on a
+verification workload; keep the candidate with the smallest KL as long as it
+stays under ``kl_budget``. Layer 0 is never a candidate (mandatory refresh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def kl_divergence(p_logits: np.ndarray, q_logits: np.ndarray) -> float:
+    """Mean KL(p || q) over leading dims; logits (..., V)."""
+    p_logits = p_logits.astype(np.float64)
+    q_logits = q_logits.astype(np.float64)
+    p_logits = p_logits - p_logits.max(-1, keepdims=True)
+    q_logits = q_logits - q_logits.max(-1, keepdims=True)
+    lp = p_logits - np.log(np.exp(p_logits).sum(-1, keepdims=True))
+    lq = q_logits - np.log(np.exp(q_logits).sum(-1, keepdims=True))
+    p = np.exp(lp)
+    return float((p * (lp - lq)).sum(-1).mean())
+
+
+def greedy_calibrate(eval_fn: Callable[[Tuple[int, ...]], np.ndarray],
+                     num_layers: int, kl_budget: float = 0.02,
+                     max_reuse: Optional[int] = None) -> Tuple[int, ...]:
+    """eval_fn(schedule) -> verification logits for the calibration batch.
+
+    Returns the calibrated REUSE-layer index tuple (sorted)."""
+    baseline = eval_fn(())
+    schedule: List[int] = []
+    candidates = list(range(1, num_layers))
+    max_reuse = max_reuse if max_reuse is not None else num_layers - 1
+    while candidates and len(schedule) < max_reuse:
+        best = None
+        best_kl = None
+        for c in candidates:
+            trial = tuple(sorted(schedule + [c]))
+            kl = kl_divergence(baseline, eval_fn(trial))
+            if best_kl is None or kl < best_kl:
+                best, best_kl = c, kl
+        if best_kl is None or best_kl > kl_budget:
+            break
+        schedule.append(best)
+        candidates.remove(best)
+    return tuple(sorted(schedule))

@@ -1,0 +1,2 @@
+from repro.data.pipeline import PrefetchIterator, make_global_batch  # noqa: F401
+from repro.data.synthetic import SyntheticConfig, SyntheticCorpus, token_stream  # noqa: F401

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes:
+
+nsa_verify — fused grouped-query NSA verification (full fusion for reuse
+             layers, partial fusion for refresh layers, branch-wise vanilla
+             baseline; exact merged-schedule and approximate shared-index
+             grouping) + pure-jnp oracle.
+flash      — dense tree-verification flash attention (the full-attention
+             baseline + draft-model attention) + oracle.
+routing    — refresh-layer "Routing Launch" (paper §5.1): fused
+             compressed-branch attention + selection-score mapping (one
+             normalization yields both) + oracle.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling, scalar-prefetch
+block gathers) and are validated on CPU with interpret=True.
+"""
+from repro.kernels import flash, nsa_verify, routing  # noqa: F401

@@ -1,0 +1,103 @@
+"""Flash-attention tree-verification kernel (Pallas TPU).
+
+Dense baseline for speculative verification: grid (B, Hkv, work) where work
+walks KV-cache tiles then one draft tile; online softmax in VMEM scratch;
+single write-back. Shares the accumulation structure of the fused NSA kernel
+but with one branch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def make_kernel(*, R: int, Gq: int, Dh: int, TS: int, ST: int, Tp: int,
+                window: int):
+    TOTAL = ST + 1
+
+    def kernel(s_pos, s_scalar, q_ref, k_ref, v_ref, kd_ref, vd_ref, dmask_ref,
+               o_ref, acc_ref, l_ref, m_ref):
+        b, h, w = (pl.program_id(i) for i in range(3))
+
+        @pl.when(w == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG)
+
+        q = q_ref[0, 0].astype(jnp.float32)                 # (R, Dh)
+        pos_r = jnp.repeat(s_pos[b], Gq, total_repeat_length=R)
+        prefix_len = s_scalar[0]
+
+        def update(logits, mask, v):
+            lm = jnp.where(mask, logits, NEG)
+            m_new = jnp.maximum(m_ref[0], lm.max(-1))
+            alpha = jnp.exp(m_ref[0] - m_new)
+            p = jnp.exp(lm - m_new[:, None]) * mask
+            l_ref[0] = l_ref[0] * alpha + p.sum(-1)
+            acc_ref[0] = acc_ref[0] * alpha[:, None] + p @ v.astype(jnp.float32)
+            m_ref[0] = m_new
+
+        @pl.when(w < ST)
+        def _cache():
+            t = jnp.minimum(w, ST - 1)
+            kpos = t * TS + jnp.arange(TS)
+            mask = (kpos[None, :] < prefix_len) & (kpos[None, :] <= pos_r[:, None])
+            if window > 0:
+                mask &= kpos[None, :] > pos_r[:, None] - window
+            update(q @ k_ref[0, :, 0].astype(jnp.float32).T, mask, v_ref[0, :, 0])
+
+        @pl.when(w == ST)
+        def _draft():
+            mask = dmask_ref[0] > 0                          # (R, Tp)
+            update(q @ kd_ref[0, :, 0].astype(jnp.float32).T, mask, vd_ref[0, :, 0])
+
+        @pl.when(w == TOTAL - 1)
+        def _fin():
+            l = l_ref[0]
+            o_ref[0, 0] = jnp.where(l[:, None] > 0,
+                                    acc_ref[0] / jnp.maximum(l, 1e-30)[:, None],
+                                    0.0).astype(o_ref.dtype)
+
+    return kernel, TOTAL
+
+
+def build_flash_verify(*, B: int, Hkv: int, R: int, Gq: int, Dh: int, Sp: int,
+                       Tp: int, TS: int = 128, window: int = 0,
+                       out_dtype=jnp.float32, interpret: bool = True):
+    TS = min(TS, Sp)
+    ST = max(1, Sp // TS)
+    kernel, TOTAL = make_kernel(R=R, Gq=Gq, Dh=Dh, TS=TS, ST=ST, Tp=Tp,
+                                window=window)
+    grid = (B, Hkv, TOTAL)
+
+    def cache_tile(b, h, w, *s):
+        return (b, jnp.minimum(w, ST - 1), h, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, R, Dh), lambda b, h, w, *s: (b, h, 0, 0)),  # q
+                pl.BlockSpec((1, TS, 1, Dh), cache_tile),                        # k
+                pl.BlockSpec((1, TS, 1, Dh), cache_tile),                        # v
+                pl.BlockSpec((1, Tp, 1, Dh), lambda b, h, w, *s: (b, 0, h, 0)),  # k_draft
+                pl.BlockSpec((1, Tp, 1, Dh), lambda b, h, w, *s: (b, 0, h, 0)),  # v_draft
+                pl.BlockSpec((1, R, Tp), lambda b, h, w, *s: (b, 0, 0)),         # dmask
+            ],
+            out_specs=pl.BlockSpec((1, 1, R, Dh), lambda b, h, w, *s: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, R, Dh), jnp.float32),
+                pltpu.VMEM((1, R), jnp.float32),
+                pltpu.VMEM((1, R), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, Dh), out_dtype),
+        interpret=interpret,
+    )

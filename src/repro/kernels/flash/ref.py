@@ -1,0 +1,44 @@
+"""Oracle for the dense tree-verification flash-attention kernel.
+
+Dense verification (the paper's full-attention baseline): gamma tree queries
+attend the committed prefix (optionally sliding-window limited) plus the
+draft tokens under the tree mask. One softmax over [prefix | draft].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def ref_flash_verify(q, k_cache, v_cache, k_draft, v_draft, positions,
+                     prefix_len, tree_mask, window: int = 0):
+    """q: (B,T,Hq,Dh) pre-scaled; caches (B,S,Hkv,Dh); draft (B,T,Hkv,Dh);
+    positions (B,T); tree_mask (B,T,T). Returns (B,T,Hq,Dh) f32."""
+    B, T, Hq, Dh = q.shape
+    S = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    Gq = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, Gq, Dh).astype(jnp.float32)
+    kpos = jnp.arange(S)[None, None, :]
+    pmask = (kpos < prefix_len) & (kpos <= positions[..., None])
+    if window > 0:
+        pmask &= kpos > positions[..., None] - window
+    lp = jnp.einsum("bthgd,bkhd->bthgk", qg, k_cache.astype(jnp.float32))
+    lp = jnp.where(pmask[:, :, None, None], lp, NEG)
+    dmask = tree_mask & (positions[:, :, None] >= positions[:, None, :])
+    if window > 0:
+        dmask &= (positions[:, :, None] - positions[:, None, :]) < window
+    ld = jnp.einsum("bthgd,bkhd->bthgk", qg, k_draft.astype(jnp.float32))
+    ld = jnp.where(dmask[:, :, None, None], ld, NEG)
+    logits = jnp.concatenate([lp, ld], axis=-1)
+    m = logits.max(-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p * jnp.concatenate([pmask[:, :, None, None].repeat(Hkv, 2).repeat(Gq, 3),
+                             dmask[:, :, None, None].repeat(Hkv, 2).repeat(Gq, 3)], -1)
+    l = p.sum(-1, keepdims=True)
+    o = jnp.einsum("bthgk,bkhd->bthgd", p[..., :S], v_cache.astype(jnp.float32)) + \
+        jnp.einsum("bthgk,bkhd->bthgd", p[..., S:], v_draft.astype(jnp.float32))
+    o = jnp.where(l > 0, o / jnp.maximum(l, 1e-30), 0.0)
+    return o.reshape(B, T, Hq, Dh)

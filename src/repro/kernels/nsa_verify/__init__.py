@@ -1,0 +1,1 @@
+from repro.kernels.nsa_verify import kernel, ops, ref  # noqa: F401

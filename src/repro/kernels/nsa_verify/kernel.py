@@ -1,0 +1,223 @@
+"""Fused SSV verification kernel (Pallas TPU).
+
+TPU-native redesign of the paper's grouped-query NSA verification kernels
+(§4, §5). One grid cell = (batch b, query-group g, kv-head h) — the Pallas
+analogue of a GPU thread block; the 4th grid dimension walks a *work list*:
+
+    [cmp tiles | merged selected blocks | window tiles | draft tile]
+
+Each work step loads exactly one KV tile into VMEM (the other inputs' block
+indices are frozen, so the TPU pipeline skips their re-fetch), computes
+masked logits for the group's R = C·Gq query rows, and accumulates into the
+branch's private online-softmax state held in VMEM scratch — the TPU version
+of the paper's "per-branch normalization state in registers". The final work
+step applies the learned gates and performs the single HBM write-back
+("Unified Write-back" / "In-Register Aggregation").
+
+Variants (all built by ``build_verify_call``):
+  * full fusion (reuse layers):     include_cmp=True, combine=True
+  * partial fusion (refresh layers): include_cmp=False + o_cmp input
+  * branch-wise vanilla baseline:   one include_* flag at a time,
+    combine=False (materializes the branch output — Figure 6(a) behavior)
+  * exact vs approximate grouping is purely a matter of the merged-index /
+    ownership inputs (built in ops.py) — the kernel is oblivious.
+
+Selected blocks are gathered from HBM via scalar-prefetched block indices in
+the BlockSpec index_map (the paged-attention pattern) — each unique merged
+block is fetched exactly once per group, which is the paper's dedup-and-share
+semantics on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _update(acc_ref, l_ref, m_ref, br: int, logits, mask, v_tile):
+    """Online-softmax accumulation for one branch slot ``br``.
+    logits: (R, K) f32; mask: (R, K) bool; v_tile: (K, Dh)."""
+    lm = jnp.where(mask, logits, NEG)
+    m_old = m_ref[br]                                    # (R,)
+    m_new = jnp.maximum(m_old, lm.max(axis=-1))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(lm - m_new[:, None]) * mask
+    l_ref[br] = l_ref[br] * alpha + p.sum(axis=-1)
+    acc_ref[br] = acc_ref[br] * alpha[:, None] + p @ v_tile.astype(jnp.float32)
+    m_ref[br] = m_new
+
+
+def make_kernel(*, C: int, Gq: int, Dh: int, M: int, TC: int, NCB_T: int,
+                TW: int, WT: int, Tp: int, sel_block: int, cmp_block: int,
+                cmp_stride: int, window: int, include_cmp: bool,
+                include_sel: bool, include_win: bool, combine: bool,
+                has_cmp_in: bool):
+    R = C * Gq
+    CMP_STEPS = NCB_T if include_cmp else 0
+    SEL_STEPS = M if include_sel else 0
+    WIN_STEPS = (WT + 1) if include_win else 0     # +1 = draft tile step
+    TOTAL = max(CMP_STEPS + SEL_STEPS + WIN_STEPS, 1)
+
+    def kernel(s_merged, s_mvalid, s_own, s_pos, s_scalar,
+               q_ref, kcmp_ref, vcmp_ref, kblk_ref, vblk_ref, kwin_ref,
+               vwin_ref, kdr_ref, vdr_ref, gates_ref, dmask_ref,
+               *rest):
+        if has_cmp_in:
+            ocmp_ref, o_ref, acc_ref, l_ref, m_ref = rest
+        else:
+            o_ref, acc_ref, l_ref, m_ref = rest
+        b, g, h, w = (pl.program_id(i) for i in range(4))
+
+        @pl.when(w == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG)
+
+        q = q_ref[0, 0, 0].astype(jnp.float32)                     # (R, Dh)
+        pos_c = s_pos[b, g]                                         # (C,) SMEM
+        pos_r = jnp.repeat(pos_c, Gq, total_repeat_length=R)        # (R,)
+        prefix_len = s_scalar[0]
+        ncb_valid = s_scalar[1]
+        win_start = s_scalar[2]
+
+        if include_cmp:
+            @pl.when(w < CMP_STEPS)
+            def _cmp():
+                t = jnp.minimum(w, NCB_T - 1)
+                ids = t * TC + jnp.arange(TC)
+                ends = ids * cmp_stride + cmp_block - 1
+                mask = (ends[None, :] <= pos_r[:, None]) & (ids[None, :] < ncb_valid)
+                kt = kcmp_ref[0, :, 0].astype(jnp.float32)          # (TC, Dh)
+                _update(acc_ref, l_ref, m_ref, 0, q @ kt.T, mask, vcmp_ref[0, :, 0])
+
+        if include_sel:
+            @pl.when((w >= CMP_STEPS) & (w < CMP_STEPS + SEL_STEPS))
+            def _sel():
+                m = jnp.clip(w - CMP_STEPS, 0, M - 1)
+                blk = s_merged[b, g, h, m]
+                tok = blk * sel_block + jnp.arange(sel_block)
+                ownrow = s_own[b, g, h, :, m]                       # (C,) int32
+                own_r = jnp.repeat(ownrow, Gq, total_repeat_length=R) > 0
+                mask = (tok[None, :] < prefix_len) & (tok[None, :] <= pos_r[:, None]) \
+                    & (s_mvalid[b, g, h, m] > 0) & own_r[:, None]
+                kt = kblk_ref[0, 0, :, 0].astype(jnp.float32)       # (l', Dh)
+                _update(acc_ref, l_ref, m_ref, 1, q @ kt.T, mask, vblk_ref[0, 0, :, 0])
+
+        if include_win:
+            @pl.when((w >= CMP_STEPS + SEL_STEPS) & (w < TOTAL - 1))
+            def _win():
+                t = jnp.clip(w - CMP_STEPS - SEL_STEPS, 0, max(WT - 1, 0))
+                kpos = win_start + t * TW + jnp.arange(TW)
+                mask = (kpos[None, :] < prefix_len) & \
+                    (kpos[None, :] > pos_r[:, None] - window) & \
+                    (kpos[None, :] <= pos_r[:, None])
+                kt = kwin_ref[0, :, 0].astype(jnp.float32)          # (TW, Dh)
+                _update(acc_ref, l_ref, m_ref, 2, q @ kt.T, mask, vwin_ref[0, :, 0])
+
+            @pl.when(w == TOTAL - 1)
+            def _draft():
+                kt = kdr_ref[0, :, 0].astype(jnp.float32)           # (Tp, Dh)
+                mask = dmask_ref[0, 0] > 0                          # (R, Tp)
+                _update(acc_ref, l_ref, m_ref, 2, q @ kt.T, mask, vdr_ref[0, :, 0])
+
+        @pl.when(w == TOTAL - 1)
+        def _finalize():
+            gts = gates_ref[0, 0, 0].astype(jnp.float32)            # (R, 3)
+
+            def safe(br):
+                l = l_ref[br]
+                return jnp.where(l[:, None] > 0,
+                                 acc_ref[br] / jnp.maximum(l, 1e-30)[:, None], 0.0)
+
+            if combine:
+                o_cmp = (ocmp_ref[0, 0, 0].astype(jnp.float32) if has_cmp_in
+                         else safe(0))
+                out = gts[:, 0:1] * o_cmp + gts[:, 1:2] * safe(1) + gts[:, 2:3] * safe(2)
+            else:
+                out = safe(0 if include_cmp else (1 if include_sel else 2))
+            o_ref[0, 0, 0] = out.astype(o_ref.dtype)
+
+    return kernel, TOTAL, CMP_STEPS, SEL_STEPS
+
+
+def build_verify_call(*, B: int, G: int, Hkv: int, C: int, Gq: int, Dh: int,
+                      NSB: int, NCBp: int, M: int, Wp: int, Tp: int,
+                      sel_block: int, cmp_block: int, cmp_stride: int,
+                      window: int, TC: int = 128, TW: int = 128,
+                      include_cmp: bool = True, include_sel: bool = True,
+                      include_win: bool = True, combine: bool = True,
+                      has_cmp_in: bool = False, out_dtype=jnp.float32,
+                      interpret: bool = True):
+    """Returns fn(s_merged, s_mvalid, s_own, s_pos, s_scalar, q_grp, k_cmp,
+    v_cmp, k_blkd, v_blkd, k_win, v_win, k_draft, v_draft, gates_grp,
+    dmask_grp[, o_cmp_grp]) -> o_grp (B, G, Hkv, R, Dh)."""
+    R = C * Gq
+    TC = min(TC, NCBp)
+    TW = min(TW, Wp)
+    NCB_T = max(1, NCBp // TC)
+    WT = max(1, Wp // TW)
+    kernel, TOTAL, _, _ = make_kernel(
+        C=C, Gq=Gq, Dh=Dh, M=M, TC=TC, NCB_T=NCB_T, TW=TW, WT=WT, Tp=Tp,
+        sel_block=sel_block, cmp_block=cmp_block, cmp_stride=cmp_stride,
+        window=window, include_cmp=include_cmp, include_sel=include_sel,
+        include_win=include_win, combine=combine, has_cmp_in=has_cmp_in)
+
+    grid = (B, G, Hkv, TOTAL)
+    CMP_STEPS = NCB_T if include_cmp else 0
+    SEL_STEPS = M if include_sel else 0
+
+    def cmp_tile(b, g, h, w, *s):
+        return (b, jnp.minimum(w, max(CMP_STEPS - 1, 0)) if include_cmp else 0, h, 0)
+
+    def blk_tile(b, g, h, w, *s):
+        s_merged = s[0]
+        m = jnp.clip(w - CMP_STEPS, 0, M - 1)
+        blk = jnp.clip(s_merged[b, g, h, m], 0, NSB - 1)
+        return (b, blk, 0, h, 0)
+
+    def win_tile(b, g, h, w, *s):
+        t = jnp.clip(w - CMP_STEPS - SEL_STEPS, 0, max(WT - 1, 0))
+        return (b, t, h, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, R, Dh), lambda b, g, h, w, *s: (b, g, h, 0, 0)),   # q
+        pl.BlockSpec((1, TC, 1, Dh), cmp_tile),                                    # k_cmp
+        pl.BlockSpec((1, TC, 1, Dh), cmp_tile),                                    # v_cmp
+        pl.BlockSpec((1, 1, sel_block, 1, Dh), blk_tile),                          # k blocks
+        pl.BlockSpec((1, 1, sel_block, 1, Dh), blk_tile),                          # v blocks
+        pl.BlockSpec((1, TW, 1, Dh), win_tile),                                    # k_win
+        pl.BlockSpec((1, TW, 1, Dh), win_tile),                                    # v_win
+        pl.BlockSpec((1, Tp, 1, Dh), lambda b, g, h, w, *s: (b, 0, h, 0)),         # k_draft
+        pl.BlockSpec((1, Tp, 1, Dh), lambda b, g, h, w, *s: (b, 0, h, 0)),         # v_draft
+        pl.BlockSpec((1, 1, 1, R, 3), lambda b, g, h, w, *s: (b, g, h, 0, 0)),     # gates
+        pl.BlockSpec((1, 1, R, Tp), lambda b, g, h, w, *s: (b, g, 0, 0)),          # dmask
+    ]
+    if has_cmp_in:
+        in_specs.append(pl.BlockSpec((1, 1, 1, R, Dh),
+                                     lambda b, g, h, w, *s: (b, g, h, 0, 0)))      # o_cmp
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, 1, R, Dh),
+                                   lambda b, g, h, w, *s: (b, g, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((3, R, Dh), jnp.float32),   # acc
+                pltpu.VMEM((3, R), jnp.float32),       # l
+                pltpu.VMEM((3, R), jnp.float32),       # m
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, G, Hkv, R, Dh), out_dtype),
+        interpret=interpret,
+    )

@@ -1,0 +1,256 @@
+"""jit-ready wrappers around the fused SSV verification kernel.
+
+``nsa_verify_fused`` is the public entry: it takes model-level tensors plus
+the SSV grouping strategy, builds the merged-schedule (exact) or shared-index
+(approx) layouts + ownership masks, pads everything to kernel tiles, invokes
+the Pallas kernel, and un-groups the output.
+
+All layout preparation is pure jnp (fuses into the surrounding XLA graph) —
+the TPU-native replacement for the paper's in-kernel warp sort/dedup (see
+DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import NSAConfig
+from repro.core import overlap
+from repro.kernels.nsa_verify import kernel as K
+
+
+def _pad_axis(x, axis: int, target: int):
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.lru_cache(maxsize=128)
+def _cached_call(key):
+    return K.build_verify_call(**dict(key))
+
+
+def prepare_groups(q, gates, sel_idx, sel_valid, positions, C: int, mode: str,
+                   n_sel: int):
+    """Group queries and build merged/ownership layouts.
+
+    q: (B,T,Hq,Dh) -> q_grp (B,G,Hkv,R,Dh); gates (B,T,3,Hq) ->
+    (B,G,Hkv,R,3); merged (B,G,Hkv,M); mvalid; own (B,G,Hkv,C,M);
+    pos_grp (B,G,C).
+    """
+    B, T, Hq, Dh = q.shape
+    Hkv = sel_idx.shape[2]
+    Gq = Hq // Hkv
+    qmap, _ = overlap.group_queries(T, C)
+    G = qmap.shape[0]
+    gi = jnp.asarray(qmap)                                          # (G, C)
+
+    qx = q.reshape(B, T, Hkv, Gq, Dh)[:, gi]                        # (B,G,C,Hkv,Gq,Dh)
+    q_grp = qx.transpose(0, 1, 3, 2, 4, 5).reshape(B, G, Hkv, C * Gq, Dh)
+    gx = gates.transpose(0, 1, 3, 2).reshape(B, T, Hkv, Gq, 3)[:, gi]
+    gates_grp = gx.transpose(0, 1, 3, 2, 4, 5).reshape(B, G, Hkv, C * Gq, 3)
+    pos_grp = positions[:, gi]                                      # (B, G, C)
+
+    if mode == "approx":
+        idx2, val2 = overlap.shared_index(sel_idx, sel_valid, positions, C)
+        # per group, merged list = the representative's n blocks (every member
+        # of the group carries identical values — take member 0's)
+        merged = idx2[:, gi[:, 0]]                                  # (B,G,Hkv,n)
+        merged = jnp.where(val2[:, gi[:, 0]], merged, -1)
+        mvalid = val2[:, gi[:, 0]]
+        own = jnp.ones((B, G, Hkv, C, merged.shape[-1]), jnp.int32)
+        merged = merged.astype(jnp.int32)
+        return q_grp, gates_grp, merged, mvalid.astype(jnp.int32), own, pos_grp, gi
+    # exact merged schedule
+    merged, own, mvalid = overlap.merged_schedule(sel_idx, sel_valid, C)
+    merged = jnp.where(mvalid, merged, -1).astype(jnp.int32)
+    return q_grp, gates_grp, merged, mvalid.astype(jnp.int32), \
+        own.astype(jnp.int32), pos_grp, gi
+
+
+def nsa_verify_fused(q, k_cache, v_cache, k_cmp, v_cmp, k_draft, v_draft,
+                     sel_idx, sel_valid, positions, prefix_len, ncb_valid,
+                     tree_mask, gates, nsa: NSAConfig, C: int = 2,
+                     mode: str = "exact", include_cmp: bool = True,
+                     o_cmp_in=None, combine: bool = True,
+                     include_sel: bool = True, include_win: bool = True,
+                     interpret: bool = True):
+    """Fused grouped-query NSA verification (see kernel.py docstring).
+
+    q: (B,T,Hq,Dh) — ALREADY rope'd and scaled by 1/sqrt(Dh).
+    Returns (B, T, Hq, Dh) f32.
+    """
+    B, T, Hq, Dh = q.shape
+    S = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    Gq = Hq // Hkv
+    lb = nsa.sel_block
+
+    q_grp, gates_grp, merged, mvalid, own, pos_grp, gi = prepare_groups(
+        q, gates, sel_idx, sel_valid, positions, C, mode, nsa.n_selected)
+    G = q_grp.shape[1]
+    M = merged.shape[-1]
+    R = C * Gq
+
+    # cache reshaped into selection blocks for the gather index_map
+    Sp = -(-S // lb) * lb
+    NSB = Sp // lb
+    k_blkd = _pad_axis(k_cache, 1, Sp).reshape(B, NSB, lb, Hkv, Dh)
+    v_blkd = _pad_axis(v_cache, 1, Sp).reshape(B, NSB, lb, Hkv, Dh)
+
+    # compressed cache padded to the cmp tile
+    NCB = k_cmp.shape[1]
+    TC = min(128, max(8, NCB))
+    NCBp = -(-NCB // TC) * TC
+    k_cmp_p = _pad_axis(k_cmp, 1, NCBp)
+    v_cmp_p = _pad_axis(v_cmp, 1, NCBp)
+
+    # window slice
+    W = min(nsa.window, S)
+    win_start = jnp.clip(jnp.asarray(prefix_len) - W, 0, max(S - W, 0))
+    k_win = jax.lax.dynamic_slice_in_dim(k_cache, win_start, W, axis=1)
+    v_win = jax.lax.dynamic_slice_in_dim(v_cache, win_start, W, axis=1)
+    TW = min(128, max(8, W))
+    Wp = -(-W // TW) * TW
+    k_win = _pad_axis(k_win, 1, Wp)
+    v_win = _pad_axis(v_win, 1, Wp)
+
+    # draft tile + combined draft mask (tree ∧ window ∧ causal ∧ valid)
+    Tp = max(8, -(-T // 8) * 8)
+    k_draft_p = _pad_axis(k_draft, 1, Tp)
+    v_draft_p = _pad_axis(v_draft, 1, Tp)
+    dist = positions[:, :, None] - positions[:, None, :]            # (B,T,T)
+    dmask = tree_mask & (dist < nsa.window) & (dist >= 0)
+    dmask_g = dmask[:, gi]                                          # (B,G,C,T)
+    dmask_g = jnp.repeat(dmask_g, Gq, axis=2)                       # (B,G,R,T)
+    dmask_g = _pad_axis(dmask_g.astype(jnp.int32), 3, Tp)
+
+    s_scalar = jnp.stack([jnp.asarray(prefix_len, jnp.int32),
+                          jnp.asarray(ncb_valid, jnp.int32),
+                          win_start.astype(jnp.int32),
+                          jnp.asarray(T, jnp.int32)])
+
+    key = tuple(sorted(dict(
+        B=B, G=G, Hkv=Hkv, C=C, Gq=Gq, Dh=Dh, NSB=NSB, NCBp=NCBp, M=M,
+        Wp=Wp, Tp=Tp, sel_block=lb, cmp_block=nsa.cmp_block,
+        cmp_stride=nsa.cmp_stride, window=nsa.window, TC=TC, TW=TW,
+        include_cmp=include_cmp, include_sel=include_sel,
+        include_win=include_win, combine=combine,
+        has_cmp_in=o_cmp_in is not None, interpret=interpret).items()))
+    call = _cached_call(key)
+
+    merged_c = jnp.clip(merged, 0, NSB - 1)
+    args = [merged_c, mvalid, own, pos_grp.astype(jnp.int32), s_scalar,
+            q_grp, k_cmp_p, v_cmp_p, k_blkd, v_blkd, k_win, v_win,
+            k_draft_p, v_draft_p, gates_grp, dmask_g]
+    if o_cmp_in is not None:
+        oc = o_cmp_in.reshape(B, T, Hkv, Gq, Dh)[:, gi]
+        oc = oc.transpose(0, 1, 3, 2, 4, 5).reshape(B, G, Hkv, R, Dh)
+        args.append(oc)
+    o_grp = call(*args)                                             # (B,G,Hkv,R,Dh)
+
+    o = o_grp.reshape(B, G, Hkv, C, Gq, Dh).transpose(0, 1, 3, 2, 4, 5)
+    o = o.reshape(B, G * C, Hkv * Gq, Dh)[:, :T]
+    return o
+
+
+def kernel_launch_count(nsa: NSAConfig, mode: str) -> int:
+    """Structural launch-count metric used by the benchmarks: vanilla NSA =
+    3 branch kernels + routing; refresh = routing + fused downstream; reuse =
+    1 fully fused kernel."""
+    return {"vanilla": 4, "refresh": 2, "reuse": 1}[mode]
+
+
+def nsa_verify_kernel_layer(params, cfg, x, cache, cmp_cache, prefix_len,
+                            positions, tree_mask, sel_idx=None, sel_valid=None,
+                            C: int = 2, mode: str = "exact",
+                            reuse: bool = False, interpret: bool = True):
+    """Full NSA verification of one layer through the Pallas kernels — the
+    kernel-backed counterpart of ``models.nsa.nsa_verify_ref``.
+
+    reuse=False (refresh layer): routing launch (compressed attention +
+      selection scores, XLA) -> Top-n indices -> partially fused downstream
+      kernel (slc + win + gated aggregation, include_cmp=False).
+    reuse=True: indices are inherited (``sel_idx`` required) -> single fully
+      fused kernel computing all three branches.
+
+    Returns (out (B,T,D), (k_new, v_new), (sel_idx, sel_valid)).
+    """
+    import numpy as _np
+
+    from repro.models import attention as attn_lib
+    from repro.models import nsa as nsa_lib
+
+    nsa = cfg.nsa
+    B, T, _ = x.shape
+    Hq, Dh = cfg.num_heads, cfg.head_dim
+    q, k_new, v_new = attn_lib.qkv(params, cfg, x, positions)
+    q_s = q / _np.sqrt(Dh)
+    g_all = nsa_lib.gates(params, x, Hq)                           # (B,T,3,Hq)
+    ncb_valid = nsa_lib.dyn_num_cmp_blocks(prefix_len, nsa)
+
+    if reuse:
+        assert sel_idx is not None, "reuse layers inherit indices"
+        out = nsa_verify_fused(
+            q_s, cache["k"], cache["v"], cmp_cache["k_cmp"], cmp_cache["v_cmp"],
+            k_new, v_new, sel_idx, sel_valid, positions, prefix_len, ncb_valid,
+            tree_mask, g_all, nsa, C=C, mode=mode, include_cmp=True,
+            interpret=interpret)
+    else:
+        o_cmp, p_slc = nsa_lib.routing(params, cfg, q, cmp_cache["k_cmp"],
+                                       cmp_cache["v_cmp"], positions,
+                                       kv_len=cache["k"].shape[1],
+                                       ncb_valid=ncb_valid)
+        sel_idx, sel_valid = nsa_lib.select_topn(p_slc, positions, prefix_len, nsa)
+        out = nsa_verify_fused(
+            q_s, cache["k"], cache["v"], cmp_cache["k_cmp"], cmp_cache["v_cmp"],
+            k_new, v_new, sel_idx, sel_valid, positions, prefix_len, ncb_valid,
+            tree_mask, g_all, nsa, C=C, mode=mode, include_cmp=False,
+            o_cmp_in=o_cmp, interpret=interpret)
+    out = out.astype(x.dtype).reshape(B, T, Hq * Dh) @ params["wo"]
+    return out, (k_new, v_new), (sel_idx, sel_valid)
+
+
+def nsa_verify_vanilla_layer(params, cfg, x, cache, cmp_cache, prefix_len,
+                             positions, tree_mask, interpret: bool = True):
+    """Vanilla-NSA baseline execution (paper Fig. 6(a)): per-branch kernels
+    with intermediate branch-output materialization, no grouping (C=1), fresh
+    index construction — the reference point the SSV speedups are measured
+    against."""
+    import numpy as _np
+
+    from repro.models import attention as attn_lib
+    from repro.models import nsa as nsa_lib
+
+    nsa = cfg.nsa
+    B, T, _ = x.shape
+    Hq, Dh = cfg.num_heads, cfg.head_dim
+    q, k_new, v_new = attn_lib.qkv(params, cfg, x, positions)
+    q_s = q / _np.sqrt(Dh)
+    g_all = nsa_lib.gates(params, x, Hq)
+    ncb_valid = nsa_lib.dyn_num_cmp_blocks(prefix_len, nsa)
+    o_cmp, p_slc = nsa_lib.routing(params, cfg, q, cmp_cache["k_cmp"],
+                                   cmp_cache["v_cmp"], positions,
+                                   kv_len=cache["k"].shape[1], ncb_valid=ncb_valid)
+    sel_idx, sel_valid = nsa_lib.select_topn(p_slc, positions, prefix_len, nsa)
+    common = dict(interpret=interpret, C=1, mode="exact", combine=False)
+    o_slc = nsa_verify_fused(q_s, cache["k"], cache["v"], cmp_cache["k_cmp"],
+                             cmp_cache["v_cmp"], k_new, v_new, sel_idx, sel_valid,
+                             positions, prefix_len, ncb_valid, tree_mask, g_all,
+                             nsa, include_cmp=False, include_win=False, **common)
+    o_win = nsa_verify_fused(q_s, cache["k"], cache["v"], cmp_cache["k_cmp"],
+                             cmp_cache["v_cmp"], k_new, v_new, sel_idx, sel_valid,
+                             positions, prefix_len, ncb_valid, tree_mask, g_all,
+                             nsa, include_cmp=False, include_sel=False, **common)
+    # branch outputs materialize (HBM round-trip), gated combine in XLA
+    out = g_all[:, :, 0][..., None] * o_cmp.astype(jnp.float32) + \
+        g_all[:, :, 1][..., None] * o_slc + g_all[:, :, 2][..., None] * o_win
+    out = out.astype(x.dtype).reshape(B, T, Hq * Dh) @ params["wo"]
+    return out, (k_new, v_new), (sel_idx, sel_valid)

@@ -1,0 +1,166 @@
+"""Pure-jnp oracle for the fused SSV verification kernel.
+
+Kernel-level contract (projections/RoPE happen outside; the kernel sees
+ready tensors). Per (batch b, kv-head h, query-group g of C adjacent
+flattened-tree queries) the fused kernel computes the three NSA branches with
+independent online-softmax states and gated aggregation:
+
+  cmp — queries vs compressed KV (visibility: block fully before query pos,
+        block index < ncb_valid)
+  slc — queries vs the group's merged selected blocks (exact: ownership mask
+        restores per-query semantics; approx: all rows own all merged blocks)
+  win — queries vs [win_start, win_start+W) trailing prefix slice (per-row
+        sliding window) plus the draft tokens (tree mask ∧ window distance)
+
+Output: out[row] = g_cmp·o_cmp + g_slc·o_slc + g_win·o_win per query row
+(row = (c, gqa-subhead)). Branches with zero visible tokens contribute 0.
+
+This file is the oracle the Pallas kernel is tested against for every shape/
+dtype in tests/test_kernels_nsa_verify.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -1e30
+
+
+def _branch_attend(logits, mask, v):
+    """logits: (R, K) f32; mask: (R, K) bool; v: (K, Dh). Returns (R, Dh)
+    softmax attention with fully-masked rows -> 0."""
+    logits = jnp.where(mask, logits, NEG)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m) * mask
+    l = p.sum(-1, keepdims=True)
+    o = p @ v.astype(jnp.float32)
+    return jnp.where(l > 0, o / jnp.maximum(l, 1e-30), 0.0)
+
+
+def ref_verify_group(q, k_cache, v_cache, k_cmp, v_cmp, k_draft, v_draft,
+                     merged_idx, own, positions, group_qidx, prefix_len,
+                     ncb_valid, tree_mask, gates, *, sel_block: int,
+                     cmp_block: int, cmp_stride: int, window: int,
+                     include_cmp: bool = True, o_cmp_in=None):
+    """One (b, h, g) instance.
+
+    q:          (C, Gq, Dh)  query rows (C queries x GQA subheads), pre-scaled
+    k_cache:    (S, Dh), v_cache: (S, Dh)   this kv-head's committed cache
+    k_cmp:      (NCB, Dh), v_cmp: (NCB, Dh)
+    k_draft:    (T, Dh), v_draft: (T, Dh)   draft-token K/V for this head
+    merged_idx: (M,) int32 merged selected blocks (-1 padding)
+    own:        (C, M) bool ownership (exact) or all-True (approx)
+    positions:  (T,) absolute positions of all draft queries
+    group_qidx: (C,) indices of this group's queries into the T flattened
+    prefix_len, ncb_valid: scalars
+    tree_mask:  (T, T) bool
+    gates:      (C, Gq, 3) f32 (cmp, slc, win)
+    o_cmp_in:   (C, Gq, Dh) — partial-fusion mode (include_cmp=False) passes
+                the routing launch's compressed-branch output instead.
+    Returns (C, Gq, Dh) f32.
+    """
+    C, Gq, Dh = q.shape
+    R = C * Gq
+    qf = q.reshape(R, Dh).astype(jnp.float32)
+    pos_c = positions[group_qidx]                                  # (C,)
+    pos_r = jnp.repeat(pos_c, Gq)                                  # (R,)
+
+    # ---- cmp branch
+    if include_cmp:
+        NCB = k_cmp.shape[0]
+        ends = jnp.arange(NCB) * cmp_stride + cmp_block - 1
+        cmask = (ends[None, :] <= pos_r[:, None]) & \
+            (jnp.arange(NCB)[None, :] < ncb_valid)
+        logits = qf @ k_cmp.astype(jnp.float32).T
+        o_cmp = _branch_attend(logits, cmask, v_cmp)
+    else:
+        o_cmp = o_cmp_in.reshape(R, Dh).astype(jnp.float32)
+
+    # ---- slc branch over merged blocks
+    M = merged_idx.shape[0]
+    blk = jnp.clip(merged_idx, 0, None)
+    tok = blk[:, None] * sel_block + jnp.arange(sel_block)[None, :]  # (M, l')
+    S = k_cache.shape[0]
+    tokc = jnp.clip(tok, 0, S - 1)
+    k_sel = k_cache[tokc.reshape(-1)]                               # (M*l', Dh)
+    v_sel = v_cache[tokc.reshape(-1)]
+    own_r = jnp.repeat(own, Gq, axis=0)                             # (C,M) -> (R,M)
+    valid_tok = jnp.repeat(merged_idx >= 0, sel_block)[None, :]
+    own_tok = jnp.repeat(own_r, sel_block, axis=1)                  # (R, M*l')
+    smask = (tokc.reshape(-1)[None, :] < prefix_len) & \
+        (tokc.reshape(-1)[None, :] <= pos_r[:, None]) & valid_tok & own_tok
+    logits = qf @ k_sel.astype(jnp.float32).T
+    o_slc = _branch_attend(logits, smask, v_sel)
+
+    # ---- win branch: trailing prefix slice + draft tokens
+    W = min(window, S)
+    win_start = jnp.clip(prefix_len - W, 0, max(S - W, 0))
+    k_win = jax.lax.dynamic_slice_in_dim(k_cache, win_start, W, axis=0)
+    v_win = jax.lax.dynamic_slice_in_dim(v_cache, win_start, W, axis=0)
+    kpos = win_start + jnp.arange(W)
+    wmask = (kpos[None, :] < prefix_len) & (kpos[None, :] > pos_r[:, None] - window) & \
+        (kpos[None, :] <= pos_r[:, None])
+    dist = pos_r[:, None] - positions[None, :]
+    tmask_rows = tree_mask[group_qidx]                              # (C, T)
+    dmask = jnp.repeat(tmask_rows, Gq, axis=0) & (dist < window) & (dist >= 0)
+    logits_w = jnp.concatenate([qf @ k_win.astype(jnp.float32).T,
+                                qf @ k_draft.astype(jnp.float32).T], axis=-1)
+    mask_w = jnp.concatenate([wmask, dmask], axis=-1)
+    o_win = _branch_attend(logits_w, mask_w,
+                           jnp.concatenate([v_win, v_draft], axis=0))
+
+    g = gates.reshape(R, 3).astype(jnp.float32)
+    out = g[:, 0:1] * o_cmp + g[:, 1:2] * o_slc + g[:, 2:3] * o_win
+    return out.reshape(C, Gq, Dh)
+
+
+def ref_verify_batched(q, k_cache, v_cache, k_cmp, v_cmp, k_draft, v_draft,
+                       merged_idx, own, positions, prefix_len, ncb_valid,
+                       tree_mask, gates, *, group_size: int, sel_block: int,
+                       cmp_block: int, cmp_stride: int, window: int,
+                       include_cmp: bool = True, o_cmp_in=None):
+    """Full-batch oracle.
+
+    q:          (B, T, Hq, Dh) pre-scaled, rope'd
+    k_cache:    (B, S, Hkv, Dh) (+v)
+    k_cmp:      (B, NCB, Hkv, Dh) (+v)
+    k_draft:    (B, T, Hkv, Dh) (+v)
+    merged_idx: (B, G, Hkv, M); own: (B, G, Hkv, C, M)
+    positions:  (B, T); tree_mask: (B, T, T); gates: (B, T, 3, Hq)
+    o_cmp_in:   (B, T, Hq, Dh) for partial-fusion mode
+    Returns (B, T, Hq, Dh) f32.
+    """
+    B, T, Hq, Dh = q.shape
+    Hkv = k_cache.shape[2]
+    Gq = Hq // Hkv
+    C = group_size
+    G = -(-T // C)
+    qidx = np.minimum(np.arange(G * C).reshape(G, C), T - 1)
+    out = jnp.zeros((B, T, Hq, Dh), jnp.float32)
+    for b in range(B):
+        for h in range(Hkv):
+            for g in range(G):
+                gq = qidx[g]
+                qg = q[b][gq][:, h * Gq:(h + 1) * Gq]              # (C, Gq, Dh)
+                gates_g = gates[b][gq][:, :, h * Gq:(h + 1) * Gq].transpose(0, 2, 1)
+                o = ref_verify_group(
+                    qg, k_cache[b, :, h], v_cache[b, :, h], k_cmp[b, :, h],
+                    v_cmp[b, :, h], k_draft[b, :, h], v_draft[b, :, h],
+                    merged_idx[b, g, h], own[b, g, h], positions[b],
+                    jnp.asarray(gq), prefix_len, ncb_valid, tree_mask[b],
+                    gates_g, sel_block=sel_block, cmp_block=cmp_block,
+                    cmp_stride=cmp_stride, window=window,
+                    include_cmp=include_cmp,
+                    o_cmp_in=None if o_cmp_in is None else
+                    o_cmp_in[b][gq][:, h * Gq:(h + 1) * Gq])
+                seen = set()
+                for ci, cq in enumerate(gq):
+                    # only the FIRST occurrence of a (tail-padded duplicated)
+                    # query is authoritative — padded replicas carry empty
+                    # ownership and would dilute the slc branch
+                    if int(cq) in seen:
+                        continue
+                    seen.add(int(cq))
+                    out = out.at[b, cq, h * Gq:(h + 1) * Gq].set(o[ci])
+    return out

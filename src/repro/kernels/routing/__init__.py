@@ -1,0 +1,1 @@
+from repro.kernels.routing import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,38 @@
+"""Oracle for the routing kernel (refresh-layer launch 1, paper §5.1):
+compressed-branch attention + selection-block scores in one pass.
+
+Given queries and the compressed KV cache, produce
+  o_cmp  — the compression branch's attention output, and
+  p_slc  — GQA-group-shared selection-block scores: the compressed-attention
+           probability mass mapped through the (cmp-block → selection-block)
+           fractional overlap matrix (NSA eq. 9 generalized).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def ref_routing(q, k_cmp, v_cmp, M, positions, ncb_valid, *, cmp_block: int,
+                cmp_stride: int):
+    """q: (B,T,Hq,Dh) pre-scaled; k_cmp/v_cmp: (B,NCB,Hkv,Dh);
+    M: (NCB, NSB) overlap matrix; positions (B,T); ncb_valid scalar.
+    Returns (o_cmp (B,T,Hq,Dh) f32, p_slc (B,T,Hkv,NSB) f32)."""
+    B, T, Hq, Dh = q.shape
+    NCB, Hkv = k_cmp.shape[1], k_cmp.shape[2]
+    Gq = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, Gq, Dh).astype(jnp.float32)
+    ends = jnp.arange(NCB) * cmp_stride + cmp_block - 1
+    vis = (ends[None, None, :] <= positions[..., None]) & \
+        (jnp.arange(NCB)[None, None, :] < ncb_valid)                # (B,T,NCB)
+    logits = jnp.einsum("bthgd,bkhd->bthgk", qg, k_cmp.astype(jnp.float32))
+    logits = jnp.where(vis[:, :, None, None], logits, NEG)
+    m = logits.max(-1, keepdims=True)
+    e = jnp.exp(logits - m) * vis[:, :, None, None]
+    l = e.sum(-1, keepdims=True)
+    p = jnp.where(l > 0, e / jnp.maximum(l, 1e-30), 0.0)
+    o_cmp = jnp.einsum("bthgk,bkhd->bthgd", p, v_cmp.astype(jnp.float32))
+    p_slc = jnp.einsum("bthgk,ks->bths", p, M.astype(jnp.float32))
+    return o_cmp.reshape(B, T, Hq, Dh), p_slc

@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell on placeholder devices, record memory/cost/collective artifacts.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first initialization).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k --mesh single
+  ... --force     re-run cells whose artifact already exists
+  ... --list      print the cell matrix and exit
+
+Artifacts land in artifacts/dryrun/<mesh>/<arch>__<shape>.json and are the
+inputs to analysis/roofline.py + EXPERIMENTS.md §Dry-run/§Roofline.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs as cfglib
+from repro.analysis import hlo as hlo_lib
+from repro.analysis import roofline as rl
+from repro.config import SHAPES
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str, out_dir: str,
+             force: bool = False, save_hlo: bool = False,
+             opt: bool = False) -> dict:
+    path = os.path.join(out_dir, mesh_name, f"{arch_id}__{shape_name}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    t0 = time.time()
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "status": "error"}
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+        ndev = mesh.devices.size
+        step, args, out_shardings, cfg = specs_lib.build_cell(
+            arch_id, shape_name, mesh, mesh_name, opt=opt)
+        with mesh:
+            lowered = jax.jit(step, out_shardings=out_shardings).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        ana = hlo_lib.analyze(txt, num_devices=ndev)
+        shape = specs_lib.SHAPE_BY_NAME[shape_name]
+        roof = rl.build(arch_id, shape, mesh_name, ndev, cfg, ana,
+                        mem_bytes_per_dev=(mem.argument_size_in_bytes +
+                                           mem.output_size_in_bytes +
+                                           mem.temp_size_in_bytes))
+        rec.update({
+            "status": "ok",
+            "devices": ndev,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+            },
+            "cost_analysis": {k: cost.get(k) for k in
+                              ("flops", "bytes accessed") if k in cost},
+            "hlo": {
+                "flops_per_dev": ana.flops,
+                "hbm_bytes_per_dev": ana.hbm_bytes,
+                "collective_bytes": ana.collective_bytes,
+                "collective_wire_bytes": ana.collective_wire_bytes,
+                "collective_counts": ana.collective_counts,
+            },
+            "roofline": roof.row(),
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "config_name": cfg.name,
+        })
+        if save_hlo:
+            with open(path.replace(".json", ".hlo.txt"), "w") as f:
+                f.write(txt)
+    except Exception as e:  # record the failure — these are bugs to fix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multipod", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply beyond-paper optimizations (online attention); "
+                         "writes artifacts to <out>_opt")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(ART_DIR))
+    args = ap.parse_args()
+
+    archs = list(cfglib.ASSIGNED) if args.arch == "all" else args.arch.split(",")
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    if args.opt:
+        args.out = args.out.rstrip("/") + "_opt"
+    cells = [(a, s, m) for m in meshes for a in archs for s in shapes]
+    if args.list:
+        for c in cells:
+            print(*c)
+        print(f"{len(cells)} cells")
+        return
+
+    n_ok = n_fail = 0
+    for a, s, m in cells:
+        rec = run_cell(a, s, m, args.out, force=args.force,
+                       save_hlo=args.save_hlo, opt=args.opt)
+        ok = rec.get("status") == "ok"
+        n_ok += ok
+        n_fail += (not ok)
+        if ok:
+            r = rec["roofline"]
+            print(f"[OK]   {m:8s} {a:24s} {s:12s} "
+                  f"compile={rec.get('compile_s', '?')}s "
+                  f"bottleneck={r['bottleneck']:10s} "
+                  f"step={max(r['compute_s'], r['memory_s'], r['collective_s']):.4f}s "
+                  f"mem/dev={rec['memory']['argument_bytes'] / 2**30 + rec['memory']['temp_bytes'] / 2**30:.2f}GiB",
+                  flush=True)
+        else:
+            print(f"[FAIL] {m:8s} {a:24s} {s:12s} {rec.get('error', '')[:160]}",
+                  flush=True)
+    print(f"\n{n_ok} ok, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod axis
+carries cross-pod data parallelism (gradient reduction over the slower DCI
+links; see optim/compress.py for the int8 path).
+
+``make_production_mesh`` is a FUNCTION — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes,
+                         devices=jax.devices()[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    if multi_pod:
+        return MeshConfig(shape=(2, 16, 16), axes=("pod", "data", "model"))
+    return MeshConfig(shape=(16, 16), axes=("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axes: everything except 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CI (requires XLA_FLAGS host device override)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,174 @@
+"""GSPMD sharding rules for the whole framework.
+
+Strategy (MaxText-style 2D/3D):
+  * TP over ``model``: attention heads, FFN hidden, vocab, MoE expert axis.
+  * FSDP over every data-parallel axis (``data``, plus ``pod`` on the
+    multi-pod mesh): each weight's non-TP matrix dim is sharded across DP;
+    XLA all-gathers weights just-in-time inside the layer scan, so resident
+    parameter (and optimizer-state) memory is O(params / n_devices).
+  * DP: the batch is sharded over (pod × data); gradient reduction emerges
+    as reduce-scatter/all-gather pairs from GSPMD.
+  * SP: the residual stream carried between layers is sharded over ``model``
+    along the sequence axis (``activation_constraint``) — this is what keeps
+    remat-stored activations per device at seq·d/|model| (Megatron-SP).
+
+Rules are path-pattern based so they cover every architecture's param tree
+without per-arch tables. KV caches shard batch over DP and (for batch-1
+long-context cells) sequence over DP.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+
+
+def _dp(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(key: str, shape: Tuple[int, ...], mesh,
+               stacked: bool = False) -> P:
+    """Sharding rule for one parameter. ``stacked`` params carry a leading
+    layer-group dim (never sharded — scan slices it)."""
+    dp = _dp(mesh)
+    lead: Tuple = (None,) if stacked else ()
+    nd = len(shape) - len(lead)
+
+    def spec(*rest):
+        return P(*(lead + rest))
+
+    # --- top-level tables
+    if key.endswith("embed/table"):
+        return P("model", None)
+    if key.endswith("lm_head/w"):
+        return P(None, "model")
+    if "frontend_proj" in key:
+        return P(None, None)
+
+    # --- MoE experts: (E, d, f) / (E, f, d)
+    if re.search(r"ffn/(w_up|w_gate)$", key) and nd == 3:
+        return spec(None, dp, "model")
+    if re.search(r"ffn/w_down$", key) and nd == 3:
+        return spec(None, "model", dp)
+    if key.endswith("ffn/router"):
+        return spec(dp, None)
+
+    # --- dense FFN (d, f) / (f, d)
+    if re.search(r"ffn/(w_up|w_gate)$", key) and nd == 2:
+        return spec(dp, "model")
+    if re.search(r"ffn/w_down$", key) and nd == 2:
+        return spec("model", dp)
+
+    # --- attention projections
+    if re.search(r"mix/(wq|wk|wv)$", key):
+        return spec(dp, "model")
+    if key.endswith("mix/wo"):
+        return spec("model", dp)
+    if key.endswith("mix/w_gate"):          # NSA branch gates (d, 3Hq)
+        return spec(dp, None)
+    if re.search(r"mix/w_cmp_[kv]$", key):
+        return spec(None, None)
+
+    # --- recurrent blocks
+    if re.search(r"mix/(w_in|w_gate_branch|w_a|w_x|wq|wk|wv|wo_gate|w_x)$", key):
+        return spec(dp, "model")
+    if re.search(r"mix/(w_out|w_h)$", key):
+        return spec("model", dp) if key.endswith("w_out") else spec(dp, "model")
+    if key.endswith("mix/conv"):
+        return spec(None, "model")
+    if key.endswith("mix/lam"):
+        return spec("model")
+    if re.search(r"mix/(wi|wf)$", key):
+        return spec(dp, None)
+
+    # --- 1-D / small leaves (norm scales, biases, gate vectors, phis)
+    return spec(*([None] * nd))
+
+
+def param_specs(cfg: ModelConfig, params_tree, mesh):
+    """Pytree of PartitionSpec matching ``params_tree`` (may be SDS tree)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = []
+    for path, leaf in flat:
+        key = _path_key(path)
+        stacked = key.startswith("segments/")
+        specs.append(param_spec(key, tuple(leaf.shape), mesh, stacked=stacked))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shardings_of(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh) -> P:
+    return P(_dp(mesh), None)
+
+
+def activation_constraint(mesh, layout: str = "sp"):
+    """Residual-stream constraint between layers.
+
+    layout="sp"    — batch over DP, sequence over model (Megatron-SP): best
+                     for the chunked-attention baseline (stored activations
+                     seq/|model| per device).
+    layout="dmodel"— batch over DP, d_model over model: keeps the flash
+                     path's (S -> tiles) reshapes shard-local (reshaping an
+                     SP-sharded sequence axis forces XLA to re-shard every
+                     tile — the §Perf iteration-2 diagnosis)."""
+    dp = _dp(mesh)
+    spec = P(dp, "model", None) if layout == "sp" else P(dp, None, "model")
+
+    def f(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return f
+
+
+def cache_specs(cfg: ModelConfig, caches_tree, mesh, *, shard_sequence: bool):
+    """KV/recurrent cache shardings for serve steps.
+
+    shard_sequence=False (batched decode, e.g. decode_32k): batch over DP,
+    sequence over ``model`` (flash-decoding split-K layout — per-device cache
+    = total / (|dp|·|model|), head-count agnostic so MQA archs shard too).
+    shard_sequence=True (batch-1 long context): sequence over EVERY axis.
+    Stacked cache leaves look like (n, B, S, Hkv, Dh) for kv; (n, B, NCB,
+    Hkv, Dh) for cmp; recurrent states (n, B, ...).
+    """
+    dp = _dp(mesh)
+
+    def rule(path, leaf):
+        key = _path_key(path)
+        if key.endswith("length"):
+            return P()
+        nd = len(leaf.shape)
+        if "state" in key:  # recurrent state (n, B, ...): batch over DP
+            if shard_sequence:  # batch-1 long-context: states are tiny; replicate
+                return P(*([None] * nd))
+            return P(*((None, dp) + (None,) * (nd - 2)))
+        # kv / cmp caches: (n, B, S|NCB, Hkv, Dh)
+        if nd == 5:
+            if shard_sequence:
+                return P(None, None, dp + ("model",), None, None)
+            return P(None, dp, "model", None, None)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])

@@ -1,0 +1,55 @@
+"""Training driver CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 50 --batch 8 --seq 128 --ckpt /tmp/ck
+
+Full-scale configs train on the production mesh (``--mesh single|multipod``
+requires real hardware or the dry-run device override); ``--reduced`` runs
+the CI-scale family variant on local devices.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from repro import configs as cfglib
+from repro.config import TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 error-feedback gradient compression")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = cfglib.reduced(args.arch) if args.reduced else cfglib.get_config(args.arch)
+    tcfg = TrainConfig(steps=args.steps, learning_rate=args.lr,
+                       micro_batches=args.micro_batches,
+                       checkpoint_every=args.ckpt_every,
+                       checkpoint_dir=args.ckpt, seed=args.seed,
+                       grad_compression="int8_ef" if args.compress else "none")
+
+    from repro.runtime.trainer import Trainer  # import after arg parsing
+    tr = Trainer(cfg, tcfg, batch_size=args.batch, seq_len=args.seq)
+    print(f"training {cfg.name}: {cfg.param_count():,} params, "
+          f"resume step {tr.state.step}")
+    tr.run()
+    for m in tr.metrics_log[-5:]:
+        print(json.dumps(m))
+    print(f"done at step {tr.state.step}; straggler events: "
+          f"{len(tr.watchdog.events)}")
+
+
+if __name__ == "__main__":
+    main()

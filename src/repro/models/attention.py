@@ -1,0 +1,418 @@
+"""Dense GQA attention: train (chunked causal), decode (KV cache), and
+tree-masked speculative verification.
+
+Shapes convention:
+  x:        (B, S, D)
+  q:        (B, S, Hq, Dh)
+  k, v:     (B, S, Hkv, Dh)
+  caches:   {"k": (B, S_max, Hkv, Dh), "v": ...}   (positions < length valid)
+
+GQA is computed by reshaping q to (B, S, Hkv, G, Dh) where G = Hq // Hkv.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.linear_init(ks[0], d, hq * hd, dtype)["w"],
+        "wk": layers.linear_init(ks[1], d, hkv * hd, dtype)["w"],
+        "wv": layers.linear_init(ks[2], d, hkv * hd, dtype)["w"],
+        "wo": layers.linear_init(ks[3], hq * hd, d, dtype)["w"],
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(hd, dtype)
+        p["k_norm"] = layers.rmsnorm_init(hd, dtype)
+    return p
+
+
+def qkv(params, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = (x @ params["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ params["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B, Sq, Hkv, G, Dh); k/v: (B, Skv, Hkv, Dh); mask: (B|1, Sq, Skv) or
+    (B|1, 1, 1, Sq, Skv) broadcastable.  Returns (B, Sq, Hkv, G, Dh)."""
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if mask is not None:
+        if mask.ndim == 3:
+            mask = mask[:, None, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def causal_mask(sq: int, skv: int, q_offset: int = 0, window: int = 0):
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None]  # (1, Sq, Skv)
+
+
+def attend_train(params, cfg: ModelConfig, x, positions, window: int = 0,
+                 chunk: int = 0, extra_mask=None, remat_chunks: bool = False):
+    """Full-sequence causal attention (optionally sliding-window / masked).
+
+    ``chunk`` > 0 scans over query chunks to bound the score working set —
+    this is what keeps prefill_32k lowering memory-sane at full scale.
+    ``extra_mask`` (B|1, Sq, Skv) is AND-ed in (used for NSA-selection
+    train-mode masks and for tree masks).
+    """
+    B, S, _ = x.shape
+    G = cfg.q_per_kv
+    q, k, v = qkv(params, cfg, x, positions)
+    qg = q.reshape(B, S, cfg.num_kv_heads, G, cfg.head_dim)
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+
+    if chunk and S % chunk == 0 and S > chunk:
+        nchunk = S // chunk
+        qg_c = qg.reshape(B, nchunk, chunk, cfg.num_kv_heads, G, cfg.head_dim)
+
+        def body(carry, inputs):
+            i, qc = inputs
+            m = causal_mask(chunk, S, q_offset=i * chunk, window=window)
+            if extra_mask is not None:
+                em = jax.lax.dynamic_slice_in_dim(extra_mask, i * chunk, chunk, axis=1)
+                m = m & em
+            o = _sdpa(qc, k, v, m, scale)
+            return carry, o
+
+        if remat_chunks:
+            # remat per chunk: without this, backprop through the chunk scan
+            # stores the full stacked (nchunk, ..., Sq_c, Skv) probability
+            # residuals — the dominant HBM term in the train cells
+            # (EXPERIMENTS.md §Perf iteration log)
+            body = jax.checkpoint(body, prevent_cse=False)
+        _, out = jax.lax.scan(body, None, (jnp.arange(nchunk), qg_c.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1).reshape(B, S, cfg.num_heads * cfg.head_dim)
+    else:
+        m = causal_mask(S, S, window=window)
+        if extra_mask is not None:
+            m = m & extra_mask
+        out = _sdpa(qg, k, v, m, scale).reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return out @ params["wo"], (k, v)
+
+
+def attend_train_online(params, cfg: ModelConfig, x, positions, window: int = 0,
+                        q_chunk: int = 512, kv_chunk: int = 512):
+    """Flash-style attention in pure XLA: online softmax over KV tiles, so
+    the (Sq, Skv) score matrix is never materialized in HBM — the §Perf
+    optimization for the memory-bound train/prefill cells (EXPERIMENTS.md).
+    Backward is rematerialized per tile (inner checkpoint), flash-style.
+
+    Semantics identical to ``attend_train`` (causal + optional window).
+    """
+    B, S, _ = x.shape
+    Hkv, G, Dh = cfg.num_kv_heads, cfg.q_per_kv, cfg.head_dim
+    q, k, v = qkv(params, cfg, x, positions)
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, S)
+    while S % qc:
+        qc //= 2
+    while S % kc:
+        kc //= 2
+    nq, nk = S // qc, S // kc
+    qg = q.reshape(B, nq, qc, Hkv, G, Dh)
+    kt = k.reshape(B, nk, kc, Hkv, Dh)
+    vt = v.reshape(B, nk, kc, Hkv, Dh)
+
+    def q_block(qi):
+        qx = qg[:, qi].astype(jnp.float32)                  # (B,qc,Hkv,G,Dh)
+        qpos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kx = kt[:, ki].astype(jnp.float32)
+            vx = vt[:, ki].astype(jnp.float32)
+            kpos = ki * kc + jnp.arange(kc)
+            mask = kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qx, kx) * scale
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None]) * mask[None, None, None]
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vx)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, qc), jnp.float32),
+                jnp.zeros((B, Hkv, G, qc, Dh), jnp.float32))
+        # only KV tiles at or before this q chunk can be visible (causal)
+        nk_needed = nk if window else nk  # static bound; masked anyway
+        body = jax.checkpoint(kv_step, prevent_cse=False)
+        (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(nk_needed))
+        o = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
+        return o.transpose(0, 3, 1, 2, 4)                   # (B,qc,Hkv,G,Dh)
+
+    _, outs = jax.lax.scan(lambda c, qi: (c, q_block(qi)), None, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, cfg.num_heads * cfg.head_dim)
+    out = out.astype(x.dtype) @ params["wo"]
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------- flash (custom_vjp)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_core(q, k, v, scale, window, chunk):
+    o, _ = _flash_fwd_impl(q, k, v, scale, window, chunk)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, scale, window, chunk):
+    """q: (B,S,Hkv,G,Dh) f32; k/v: (B,S,Hkv,Dh) f32. Returns (o, lse)."""
+    B, S, Hkv, G, Dh = q.shape
+    c = chunk
+    nq = nk = S // c
+    qt = q.reshape(B, nq, c, Hkv, G, Dh)
+    kt = k.reshape(B, nk, c, Hkv, Dh)
+    vt = v.reshape(B, nk, c, Hkv, Dh)
+
+    def q_block(_, qi):
+        qx = qt[:, qi]
+        qpos = qi * c + jnp.arange(c)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kpos = ki * c + jnp.arange(c)
+            mask = kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            lg = jnp.einsum("bqhgd,bkhd->bhgqk", qx, kt[:, ki]) * scale
+            lg = jnp.where(mask[None, None, None], lg, NEG_INF)
+            m_new = jnp.maximum(m, lg.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(lg - m_new[..., None]) * mask[None, None, None]
+            return (m_new, l * alpha + p.sum(-1),
+                    acc * alpha[..., None] +
+                    jnp.einsum("bhgqk,bkhd->bhgqd", p, vt[:, ki])), None
+
+        init = (jnp.full((B, Hkv, G, c), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, c), jnp.float32),
+                jnp.zeros((B, Hkv, G, c, Dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        o = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (o.transpose(0, 3, 1, 2, 4), lse)   # (B,c,Hkv,G,Dh)
+
+    _, (outs, lses) = jax.lax.scan(q_block, None, jnp.arange(nq))
+    o = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Hkv, G, Dh)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, Hkv, G, S)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, scale, window, chunk):
+    o, lse = _flash_fwd_impl(q, k, v, scale, window, chunk)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(scale, window, chunk, res, do):
+    """FlashAttention-style backward: recompute p tiles from saved lse; two
+    passes (dq over q chunks; dk/dv over kv chunks). Because this runs inside
+    custom_vjp, the scans are primal-only — no per-step carry residuals are
+    stored (the traffic/memory failure mode of naive autodiff through online
+    softmax; see EXPERIMENTS.md §Perf iteration log)."""
+    q, k, v, o, lse = res
+    B, S, Hkv, G, Dh = q.shape
+    c = chunk
+    n = S // c
+    qt = q.reshape(B, n, c, Hkv, G, Dh)
+    kt = k.reshape(B, n, c, Hkv, Dh)
+    vt = v.reshape(B, n, c, Hkv, Dh)
+    dot = do.reshape(B, n, c, Hkv, G, Dh)
+    lset = lse.reshape(B, Hkv, G, n, c)
+    D = jnp.einsum("bshgd,bshgd->bhgs", do, o).reshape(B, Hkv, G, n, c)
+
+    def mask_of(qi, ki, qpos, kpos):
+        m = kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            m &= kpos[None, :] > qpos[:, None] - window
+        return m
+
+    def dq_block(_, qi):
+        qx, dox = qt[:, qi], dot[:, qi]
+        lsei, Di = lset[:, :, :, qi], D[:, :, :, qi]
+        qpos = qi * c + jnp.arange(c)
+
+        def kv_step(dq, ki):
+            kpos = ki * c + jnp.arange(c)
+            m = mask_of(qi, ki, qpos, kpos)
+            lg = jnp.einsum("bqhgd,bkhd->bhgqk", qx, kt[:, ki]) * scale
+            p = jnp.exp(lg - lsei[..., None]) * m[None, None, None]
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dox, vt[:, ki])
+            ds = p * (dp - Di[..., None]) * scale
+            return dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kt[:, ki]), None
+
+        dq, _ = jax.lax.scan(kv_step, jnp.zeros_like(qx), jnp.arange(n))
+        return None, dq
+
+    _, dqs = jax.lax.scan(dq_block, None, jnp.arange(n))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Hkv, G, Dh)
+
+    def dkv_block(_, ki):
+        kx, vx = kt[:, ki], vt[:, ki]
+        kpos = ki * c + jnp.arange(c)
+
+        def q_step(carry, qi):
+            dk, dv = carry
+            qpos = qi * c + jnp.arange(c)
+            m = mask_of(qi, ki, qpos, kpos)
+            qx, dox = qt[:, qi], dot[:, qi]
+            lg = jnp.einsum("bqhgd,bkhd->bhgqk", qx, kx) * scale
+            p = jnp.exp(lg - lset[:, :, :, qi][..., None]) * m[None, None, None]
+            dv = dv + jnp.einsum("bhgqk,bqhgd->bkhd", p, dox)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dox, vx)
+            ds = p * (dp - D[:, :, :, qi][..., None]) * scale
+            dk = dk + jnp.einsum("bhgqk,bqhgd->bkhd", ds, qx)
+            return (dk, dv), None
+
+        (dk, dv), _ = jax.lax.scan(q_step, (jnp.zeros_like(kx), jnp.zeros_like(vx)),
+                                   jnp.arange(n))
+        return None, (dk, dv)
+
+    _, (dks, dvs) = jax.lax.scan(dkv_block, None, jnp.arange(n))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, S, Hkv, Dh)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, S, Hkv, Dh)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attend_train_flash(params, cfg: ModelConfig, x, positions, window: int = 0,
+                       chunk: int = 512):
+    """Flash attention with a FlashAttention-style custom VJP — the §Perf
+    memory-term optimization for train/prefill: neither forward nor backward
+    materializes (Sq, Skv) scores or per-tile softmax carries in HBM."""
+    B, S, _ = x.shape
+    Hkv, G, Dh = cfg.num_kv_heads, cfg.q_per_kv, cfg.head_dim
+    q, k, v = qkv(params, cfg, x, positions)
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    scale = float(1.0 / np.sqrt(Dh))
+    o = _flash_core(q.reshape(B, S, Hkv, G, Dh).astype(jnp.float32),
+                    k.astype(jnp.float32), v.astype(jnp.float32),
+                    scale, window, c)
+    out = o.reshape(B, S, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    return out @ params["wo"], (k, v)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def write_cache(cache, k_new, v_new, start):
+    """Insert (B, T, Hkv, Dh) at position ``start`` (scalar or per-batch)."""
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), start, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), start, axis=1)
+    return {"k": k, "v": v}
+
+
+def attend_decode(params, cfg: ModelConfig, x, cache, length, window: int = 0):
+    """Single-step decode: x (B, 1, D); attends over cache[:length] + itself.
+
+    Returns (out (B,1,D), updated cache). ``length`` is the number of valid
+    tokens already in the cache (the new token is written at ``length``).
+    Sliding-window attention slices only the trailing window of the cache,
+    keeping decode cost O(window) — this is what makes the hybrid archs'
+    long-context decode sub-quadratic.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), length, jnp.int32)
+    q, k_new, v_new = qkv(params, cfg, x, positions)
+    cache = write_cache(cache, k_new, v_new, length)
+    S_max = cache["k"].shape[1]
+    G = cfg.q_per_kv
+    qg = q.reshape(B, 1, cfg.num_kv_heads, G, cfg.head_dim)
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+    if window > 0 and S_max > window:
+        W = window + 1  # include the token just written
+        start = jnp.clip(length - window, 0, S_max - W)
+        k_w = jax.lax.dynamic_slice_in_dim(cache["k"], start, W, axis=1)
+        v_w = jax.lax.dynamic_slice_in_dim(cache["v"], start, W, axis=1)
+        kpos = (start + jnp.arange(W))[None, None, :]
+        mask = (kpos <= length) & (kpos > length - window)
+        out = _sdpa(qg, k_w, v_w, mask, scale)
+    else:
+        kpos = jnp.arange(S_max)[None, None, :]
+        mask = kpos <= length
+        if window > 0:
+            mask &= kpos > length - window
+        out = _sdpa(qg, cache["k"], cache["v"], mask, scale)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim) @ params["wo"]
+    return out, cache
+
+
+def attend_verify(params, cfg: ModelConfig, x, cache, prefix_len, positions,
+                  tree_mask, window: int = 0):
+    """Tree-masked verification over gamma draft tokens (dense baseline).
+
+    x: (B, T, D) draft-token hidden states (flattened tree, any traversal)
+    positions: (B, T) absolute positions of each draft token
+    tree_mask: (B, T, T) bool — draft token i may attend draft token j
+    The draft K/V are appended *temporarily* (cache unchanged on return);
+    acceptance decides what is committed via ``write_cache``.
+    """
+    B, T, _ = x.shape
+    q, k_new, v_new = qkv(params, cfg, x, positions)
+    G = cfg.q_per_kv
+    qg = q.reshape(B, T, cfg.num_kv_heads, G, cfg.head_dim)
+    scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+
+    S_max = cache["k"].shape[1]
+    kpos = jnp.arange(S_max)[None, None, :]
+    prefix_mask = kpos < prefix_len[..., None, None] if hasattr(prefix_len, "ndim") and getattr(prefix_len, "ndim", 0) > 0 \
+        else kpos < prefix_len
+    prefix_mask = jnp.broadcast_to(prefix_mask, (B, T, S_max))
+    if window > 0:
+        prefix_mask &= kpos > positions[..., None] - window
+
+    logits_p = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                          cache["k"].astype(jnp.float32)) * scale
+    logits_p = jnp.where(prefix_mask[:, None, None], logits_p, NEG_INF)
+    logits_d = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                          k_new.astype(jnp.float32)) * scale
+    dmask = tree_mask
+    if window > 0:
+        dist = positions[:, :, None] - positions[:, None, :]
+        dmask = dmask & (dist < window)
+    logits_d = jnp.where(dmask[:, None, None], logits_d, NEG_INF)
+
+    logits = jnp.concatenate([logits_p, logits_d], axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1)
+    pp, pd = probs[..., :S_max], probs[..., S_max:]
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pp, cache["v"].astype(jnp.float32)) \
+        + jnp.einsum("bhgqk,bkhd->bqhgd", pd, v_new.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(B, T, cfg.num_heads * cfg.head_dim) @ params["wo"]
+    return out, (k_new, v_new)

@@ -1,0 +1,121 @@
+"""Core layer primitives: norms, rotary embeddings, activations, embeddings.
+
+All layers are pure functions over parameter pytrees (dict-of-arrays), so the
+whole model is trivially `jax.jit`/`pjit`-able and scan-able over stacked
+layer parameters.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(orig_dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    # insert head axis
+    angles = angles[..., None, :]  # (..., seq, 1, half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- activations
+def squared_relu(x):
+    return jnp.square(jax.nn.relu(x))
+
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+    "squared_relu": squared_relu,
+}
+
+GATED = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu, "reglu": jax.nn.relu}
+
+
+# ---------------------------------------------------------------- linear / ffn
+def linear_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def linear(params, x):
+    return x @ params["w"]
+
+
+def ffn_init(key, d_model: int, d_ff: int, activation: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in GATED:
+        return {
+            "w_gate": linear_init(k1, d_model, d_ff, dtype)["w"],
+            "w_up": linear_init(k2, d_model, d_ff, dtype)["w"],
+            "w_down": linear_init(k3, d_ff, d_model, dtype)["w"],
+        }
+    return {
+        "w_up": linear_init(k1, d_model, d_ff, dtype)["w"],
+        "w_down": linear_init(k2, d_ff, d_model, dtype)["w"],
+    }
+
+
+def ffn(params, x, activation: str):
+    if activation in GATED:
+        act = GATED[activation]
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        act = ACTIVATIONS[activation]
+        h = act(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------- embedding
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+    return {"table": w.astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """x: (..., d) -> logits (..., V) using the (tied or separate) table."""
+    return x @ params["table"].T
+
+
+def lm_head_init(key, d_model: int, vocab: int, dtype=jnp.float32):
+    return {"w": (jax.random.normal(key, (d_model, vocab), jnp.float32) / jnp.sqrt(d_model)).astype(dtype)}
+
+
+def lm_head(params, x):
+    return x @ params["w"]

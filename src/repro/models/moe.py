@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Two dispatch strategies (config/perf-selectable):
+
+* ``dense_onehot`` (default): GShard-style grouped one-hot dispatch/combine
+  einsums with a capacity factor. Fully pjit-native — XLA shards the dispatch
+  einsums over (data × model) with no shard_map. Dispatch overhead is
+  group_size·cf/(3·d_ff) of the expert FLOPs, so the group size is chosen per
+  config (small d_ff archs like qwen3-moe use smaller groups).
+
+* ``sorted_ep`` (optimization, see EXPERIMENTS.md §Perf): shard_map over the
+  data axis, sort-based zero-FLOP dispatch into (E, C, d) with expert weights
+  tensor-sharded over the model axis.
+
+Both drop overflow tokens beyond capacity (standard GShard semantics) and add
+the usual load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, MoEConfig
+from repro.models import layers
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    moe = cfg.moe
+    d = cfg.d_model
+    dff = moe.d_expert or cfg.d_ff
+    gated = cfg.activation in layers.GATED
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, moe.num_experts)) * 0.02).astype(jnp.float32),
+        "w_up": (jax.random.normal(ks[1], (moe.num_experts, d, dff)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (moe.num_experts, dff, d)) / np.sqrt(dff)).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[3], (moe.num_experts, d, dff)) * scale).astype(dtype)
+    if moe.num_shared_experts:
+        p["shared"] = layers.ffn_init(ks[4], d, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def router_probs(params, x, moe: MoEConfig):
+    """x: (N, d) -> (probs (N, E) f32, topk_idx (N, k), topk_w (N, k))."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, moe.top_k)
+    topk_w = topk_w / jnp.clip(topk_w.sum(-1, keepdims=True), 1e-9)   # renormalize
+    return probs, topk_idx, topk_w
+
+
+def load_balance_loss(probs, topk_idx, num_experts: int):
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    N = probs.shape[0]
+    counts = jnp.zeros((num_experts,), jnp.float32).at[topk_idx.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(1.0, N * topk_idx.shape[-1])
+    p = probs.mean(axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def _expert_ffn(params, xd, activation: str):
+    """xd: (..., E, C, d) grouped tokens -> expert FFN output, batched over E."""
+    if activation in layers.GATED:
+        act = layers.GATED[activation]
+        h = act(jnp.einsum("...ecd,edf->...ecf", xd, params["w_gate"])) * \
+            jnp.einsum("...ecd,edf->...ecf", xd, params["w_up"])
+    else:
+        act = layers.ACTIVATIONS[activation]
+        h = act(jnp.einsum("...ecd,edf->...ecf", xd, params["w_up"]))
+    return jnp.einsum("...ecf,efd->...ecd", h, params["w_down"])
+
+
+def moe_apply(params, cfg: ModelConfig, x, group_size: int = 0):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    Grouped one-hot dispatch: tokens are reshaped to (n_groups, G, d); each
+    group has capacity C = ceil(G * top_k * cf / E). Positions beyond capacity
+    are dropped (their combine weight is 0; residual connection keeps the
+    token's value).
+    """
+    moe = cfg.moe
+    B, S, d = x.shape
+    N = B * S
+    xf = x.reshape(N, d)
+    G = min(group_size or moe.dispatch_group, N)
+    while N % G:
+        G //= 2
+    ngroups = N // G
+    E, K = moe.num_experts, moe.top_k
+    C = int(np.ceil(G * K * moe.capacity_factor / E))
+    C = max(C, K)
+
+    probs, topk_idx, topk_w = router_probs(params, xf, moe)
+    aux = load_balance_loss(probs, topk_idx, E)
+
+    xg = xf.reshape(ngroups, G, d)
+    idx_g = topk_idx.reshape(ngroups, G, K)
+    w_g = topk_w.reshape(ngroups, G, K)
+
+    # position of each (token, k) within its expert, per group
+    onehot = jax.nn.one_hot(idx_g, E, dtype=jnp.int32)                 # (n, G, K, E)
+    flat = onehot.reshape(ngroups, G * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                              # (n, G*K, E)
+    pos_in_e = (pos * flat).sum(-1).reshape(ngroups, G, K)             # (n, G, K)
+    keep = pos_in_e < C
+    w_g = jnp.where(keep, w_g, 0.0)
+
+    # dispatch tensor (n, G, E, C) — bf16 one-hot keeps the einsum on the MXU
+    disp = (jax.nn.one_hot(idx_g, E, dtype=x.dtype)[..., None] *
+            jax.nn.one_hot(jnp.where(keep, pos_in_e, C), C + 1, dtype=x.dtype)[..., None, :]
+            ).sum(axis=2)[..., :C]                                     # (n, G, E, C)
+    xd = jnp.einsum("ngec,ngd->necd", disp, xg)                        # (n, E, C, d)
+    yd = _expert_ffn(params, xd, cfg.activation)                       # (n, E, C, d)
+    comb = (w_g[..., None, None].astype(jnp.float32) *
+            jax.nn.one_hot(idx_g, E, dtype=jnp.float32)[..., None] *
+            jax.nn.one_hot(jnp.where(keep, pos_in_e, C), C + 1,
+                           dtype=jnp.float32)[..., None, :]).sum(axis=2)[..., :C]
+    y = jnp.einsum("ngec,necd->ngd", comb.astype(x.dtype), yd)         # (n, G, d)
+    y = y.reshape(B, S, d)
+    if moe.num_shared_experts:
+        y = y + layers.ffn(params["shared"], x, cfg.activation)
+    return y, aux

@@ -1,0 +1,285 @@
+"""Recurrent sequence-mixing blocks: RG-LRU (Griffin / RecurrentGemma) and
+xLSTM (sLSTM + mLSTM).
+
+These are the attention-free architectures in the assigned pool. The NSA/SSV
+selection machinery is inapplicable here (no KV cache to route over —
+see DESIGN.md §Arch-applicability); speculative verification is still
+supported via *state replay*: draft-tree tokens are stepped through the
+recurrence in topological order with per-node state snapshots
+(``verify_states``), so accept/reject semantics match the attention path.
+
+Train mode uses an associative scan for RG-LRU (linear recurrence) and a
+sequential ``lax.scan`` for the xLSTM cells (which have nonlinear/normalized
+state updates).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import layers
+
+RGLRU_C = 8.0  # Griffin's fixed exponent scale
+
+
+# =================================================================== RG-LRU
+def rglru_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    sd = (cfg.recurrent.state_dim or d) if cfg.recurrent else d
+    cw = cfg.recurrent.conv_width if cfg.recurrent else 4
+    ks = jax.random.split(key, 6)
+    # Lambda init so a = sigmoid(lam)^c in (0.9, 0.999) (Griffin appendix)
+    u = jax.random.uniform(ks[0], (sd,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / RGLRU_C) / (1 - u ** (1.0 / RGLRU_C)))
+    return {
+        "w_in": layers.linear_init(ks[1], d, sd, dtype)["w"],
+        "w_gate_branch": layers.linear_init(ks[2], d, sd, dtype)["w"],
+        "conv": (jax.random.normal(ks[3], (cw, sd)) * 0.02).astype(dtype),
+        "w_a": layers.linear_init(ks[4], sd, sd, dtype)["w"],   # recurrence gate
+        "w_x": layers.linear_init(ks[5], sd, sd, dtype)["w"],   # input gate
+        "lam": lam,
+        "w_out": layers.linear_init(jax.random.fold_in(key, 7), sd, d, dtype)["w"],
+    }
+
+
+def _causal_conv(conv_w, x, state=None):
+    """Depthwise causal conv. x: (B, S, sd); conv_w: (cw, sd).
+    state: (B, cw-1, sd) trailing inputs from previous call (decode)."""
+    cw = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                       # (B, S+cw-1, sd)
+    out = sum(xp[:, i : i + x.shape[1]] * conv_w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return out, new_state
+
+
+def _rglru_coeffs(params, u):
+    """u: (..., sd) conv output -> (a, b) of h_t = a*h_{t-1} + b."""
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ params["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ params["w_x"].astype(jnp.float32))
+    log_a = -RGLRU_C * r * jax.nn.softplus(-params["lam"])       # log sigmoid(lam)^(c*r)
+    a = jnp.exp(log_a)
+    gated = i * u.astype(jnp.float32)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * gated
+    return a, b
+
+
+def rglru_apply_train(params, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (B, S, d), via associative scan over the sequence."""
+    u0 = x @ params["w_in"]
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    u, _ = _causal_conv(params["conv"], u0)
+    a, b = _rglru_coeffs(params, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = (hh * gate.astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_out"]
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    sd = (cfg.recurrent.state_dim or cfg.d_model) if cfg.recurrent else cfg.d_model
+    cw = cfg.recurrent.conv_width if cfg.recurrent else 4
+    return {"h": jnp.zeros((batch, sd), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, sd), dtype)}
+
+
+def rglru_step(params, cfg: ModelConfig, x, state):
+    """x: (B, 1, d); state from rglru_init_state. Returns (out (B,1,d), state)."""
+    u0 = x @ params["w_in"]
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    u, conv_state = _causal_conv(params["conv"], u0, state["conv"])
+    a, b = _rglru_coeffs(params, u)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = (h[:, None] * gate.astype(jnp.float32)).astype(x.dtype) @ params["w_out"]
+    return out, {"h": h, "conv": conv_state}
+
+
+# =================================================================== mLSTM
+def mlstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.recurrent.num_heads or cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": layers.linear_init(ks[0], d, d, dtype)["w"],
+        "wk": layers.linear_init(ks[1], d, d, dtype)["w"],
+        "wv": layers.linear_init(ks[2], d, d, dtype)["w"],
+        "wi": (jax.random.normal(ks[3], (d, H)) * 0.02).astype(jnp.float32),
+        "wf": (jax.random.normal(ks[4], (d, H)) * 0.02).astype(jnp.float32),
+        "bf": jnp.full((H,), 3.0, jnp.float32),  # forget-gate bias: remember by default
+        "wo_gate": layers.linear_init(ks[5], d, d, dtype)["w"],
+        "w_out": layers.linear_init(ks[6], d, d, dtype)["w"],
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    H = cfg.recurrent.num_heads or cfg.num_heads
+    dh = d // H
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def _mlstm_qkvif(params, cfg, x):
+    d = cfg.d_model
+    H = cfg.recurrent.num_heads if (cfg.recurrent and cfg.recurrent.num_heads) else cfg.num_heads
+    dh = d // H
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, H, dh).astype(jnp.float32) / np.sqrt(dh)
+    k = (x @ params["wk"]).reshape(B, S, H, dh).astype(jnp.float32) / np.sqrt(dh)
+    v = (x @ params["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    it = x.astype(jnp.float32) @ params["wi"]                       # log input gate
+    ft = x.astype(jnp.float32) @ params["wf"] + params["bf"]        # pre-sigmoid forget
+    return q, k, v, it, ft
+
+
+def mlstm_step_state(state, qkvif):
+    """One stabilized mLSTM step. qkvif at one time index: q,k,v (B,H,dh), it,ft (B,H)."""
+    q, k, v, it, ft = qkvif
+    logf = -jax.nn.softplus(-ft)                                    # log sigmoid(ft)
+    m_new = jnp.maximum(logf + state["m"], it)
+    fg = jnp.exp(logf + state["m"] - m_new)
+    ig = jnp.exp(it - m_new)
+    C = fg[..., None, None] * state["C"] + ig[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = fg[..., None] * state["n"] + ig[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def _chunked_time_scan(body, state, S: int, chunk: int = 256):
+    """Sequential time scan rematerialized per chunk: backward stores only
+    chunk-boundary states instead of every step's state — what keeps the
+    xLSTM 4K-token training cells inside HBM (see EXPERIMENTS.md §Dry-run)."""
+    if S <= chunk or S % chunk:
+        return jax.lax.scan(body, state, jnp.arange(S))
+
+    def chunk_body(st, ts):
+        return jax.lax.scan(body, st, ts)
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    st, hs = jax.lax.scan(chunk_body, state,
+                          jnp.arange(S).reshape(S // chunk, chunk))
+    return st, hs.reshape((S,) + hs.shape[2:])
+
+
+def mlstm_apply_train(params, cfg: ModelConfig, x):
+    B, S, d = x.shape
+    q, k, v, it, ft = _mlstm_qkvif(params, cfg, x)
+    state = mlstm_init_state(cfg, B)
+
+    def body(st, t):
+        st, h = mlstm_step_state(st, (q[:, t], k[:, t], v[:, t], it[:, t], ft[:, t]))
+        return st, h
+
+    _, hs = _chunked_time_scan(body, state, S)
+    hs = hs.swapaxes(0, 1).reshape(B, S, d)                        # (B,S,H,dh)->(B,S,d)
+    o = jax.nn.sigmoid((x @ params["wo_gate"]).astype(jnp.float32))
+    return (hs * o).astype(x.dtype) @ params["w_out"]
+
+
+def mlstm_step(params, cfg: ModelConfig, x, state):
+    """x: (B, 1, d)."""
+    q, k, v, it, ft = _mlstm_qkvif(params, cfg, x)
+    state, h = mlstm_step_state(state, (q[:, 0], k[:, 0], v[:, 0], it[:, 0], ft[:, 0]))
+    B, d = x.shape[0], x.shape[2]
+    o = jax.nn.sigmoid((x[:, 0] @ params["wo_gate"]).astype(jnp.float32))
+    out = ((h.reshape(B, d) * o).astype(x.dtype) @ params["w_out"])[:, None]
+    return out, state
+
+
+# =================================================================== sLSTM
+def slstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    # z, i, f, o projections fused: (d, 4d) input + (d, 4d) recurrent
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, 4 * d)) / np.sqrt(d)).astype(dtype),
+        "w_h": (jax.random.normal(ks[1], (d, 4 * d)) * 0.02).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]),
+        "w_out": layers.linear_init(ks[2], d, d, dtype)["w"],
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32), "n": jnp.ones((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32), "m": jnp.zeros((batch, d), jnp.float32)}
+
+
+def slstm_step_state(params, state, xt):
+    """xt: (B, d) one timestep."""
+    d = xt.shape[-1]
+    pre = xt.astype(jnp.float32) @ params["w_x"].astype(jnp.float32) + \
+        state["h"] @ params["w_h"] + params["b"]
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    logf = -jax.nn.softplus(-f)
+    m_new = jnp.maximum(logf + state["m"], i)
+    ig = jnp.exp(i - m_new)
+    fg = jnp.exp(logf + state["m"] - m_new)
+    c = fg * state["c"] + ig * jnp.tanh(z)
+    n = fg * state["n"] + ig
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+
+def slstm_apply_train(params, cfg: ModelConfig, x):
+    B, S, d = x.shape
+    state = slstm_init_state(cfg, B)
+
+    def body(st, t):
+        st, h = slstm_step_state(params, st, x[:, t])
+        return st, h
+
+    _, hs = _chunked_time_scan(body, state, S)
+    return hs.swapaxes(0, 1).astype(x.dtype) @ params["w_out"]
+
+
+def slstm_step(params, cfg: ModelConfig, x, state):
+    state, h = slstm_step_state(params, state, x[:, 0])
+    return (h[:, None].astype(x.dtype) @ params["w_out"]), state
+
+
+# ================================================= recurrent kind dispatch
+INITS = {"rglru": rglru_init, "mlstm": mlstm_init, "slstm": slstm_init}
+TRAIN = {"rglru": rglru_apply_train, "mlstm": mlstm_apply_train, "slstm": slstm_apply_train}
+STEPS = {"rglru": rglru_step, "mlstm": mlstm_step, "slstm": slstm_step}
+STATE_INITS = {"rglru": rglru_init_state, "mlstm": mlstm_init_state, "slstm": slstm_init_state}
+
+
+def verify_states(step_fn, params, cfg: ModelConfig, x, parents, state):
+    """Tree-verify through a recurrence: process flattened draft tokens in
+    topological order; node i consumes its parent's state (parent < i, root
+    parent = -1 meaning the committed state).
+
+    x: (B, T, d); parents: (T,) int32. Returns (outs (B, T, d),
+    states list-like pytree with leading (T+1) node axis where slot 0 is the
+    committed state and slot i+1 is node i's post-state).
+    """
+    B, T, d = x.shape
+    buf = jax.tree.map(lambda s: jnp.broadcast_to(s[None], (T + 1,) + s.shape), state)
+    buf = jax.tree.map(lambda s: s.astype(jnp.float32), buf)
+
+    def body(buf, i):
+        parent_state = jax.tree.map(lambda s: s[parents[i] + 1], buf)
+        xi = jax.lax.dynamic_slice_in_dim(x, i, 1, axis=1)
+        out, new_state = step_fn(params, cfg, xi, parent_state)
+        buf = jax.tree.map(lambda b, ns: b.at[i + 1].set(ns.astype(b.dtype)), buf, new_state)
+        return buf, out[:, 0]
+
+    buf, outs = jax.lax.scan(body, buf, jnp.arange(T))
+    return outs.swapaxes(0, 1), buf

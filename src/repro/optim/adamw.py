@@ -1,0 +1,82 @@
+"""AdamW + schedules + global-norm clipping, pure JAX (no optax dependency).
+
+State layout mirrors optax ((mu, nu, count)) so checkpoints stay simple
+pytrees. Weight decay is decoupled and skipped for 1-D parameters (norms,
+biases, gate vectors) per standard practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    mu: object
+    nu: object
+    count: jnp.ndarray
+
+
+def cosine_schedule(cfg: TrainConfig) -> Callable:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+        prog = jnp.clip((step - cfg.warmup_steps) /
+                        max(cfg.steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        return cfg.learning_rate * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return f
+
+
+def linear_schedule(cfg: TrainConfig) -> Callable:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+        prog = jnp.clip((step - cfg.warmup_steps) /
+                        max(cfg.steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        return cfg.learning_rate * warm * (1 - 0.9 * prog)
+    return f
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), p)
+    return AdamWState(mu=zeros(params), nu=zeros(params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: TrainConfig,
+                 schedule: Optional[Callable] = None):
+    sched = schedule or cosine_schedule(cfg)
+    count = state.count + 1
+    lr = sched(count - 1)
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                      jnp.square(g.astype(jnp.float32)), state.nu, grads)
+    c = count.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1 - b1 ** c)
+    nu_hat_scale = 1.0 / (1 - b2 ** c)
+
+    def upd(p, m, v):
+        step = m * mu_hat_scale / (jnp.sqrt(v * nu_hat_scale) + 1e-8)
+        if p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=count)

@@ -1,0 +1,56 @@
+"""Gradient compression for cross-pod reduction: int8 quantization with
+per-tensor scales, deterministic-stochastic rounding, and error feedback.
+
+On a (pod, data, model) mesh, data-parallel gradient reduction over the
+*pod* axis crosses the slow inter-pod links; quantizing to int8 cuts that
+wire traffic 2x vs bf16 / 4x vs f32. Error feedback (residual carried in the
+optimizer state) keeps the scheme convergent (Karimireddy et al., 2019).
+
+``compress_pytree``/``decompress_pytree`` are mesh-agnostic: the train step
+applies them around the pod-axis psum inside shard_map, or — in the pure-pjit
+path used by the dry-run — around the gradient tree as a fidelity-equivalent
+simulation (the quantization error is identical; only the wire format is
+simulated). EXPERIMENTS.md §Perf reports the collective-bytes effect.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x, key):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    y = xf / scale
+    # stochastic rounding, deterministic per (key, tensor)
+    noise = jax.random.uniform(key, x.shape, jnp.float32) - 0.5
+    q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_pytree(grads, residual, step: jnp.ndarray):
+    """-> (quantized tree (int8 leaves + scales), new residual)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    res_leaves = jax.tree.leaves(residual)
+    base = jax.random.PRNGKey(0)
+    qs, scales, new_res = [], [], []
+    for i, (g, r) in enumerate(zip(leaves, res_leaves)):
+        key = jax.random.fold_in(jax.random.fold_in(base, i), step)
+        corrected = g.astype(jnp.float32) + r
+        q, s = _quantize(corrected, key)
+        qs.append(q)
+        scales.append(s)
+        new_res.append(corrected - q.astype(jnp.float32) * s)
+    return (jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, scales)), \
+        jax.tree.unflatten(treedef, new_res)
+
+
+def decompress_pytree(quantized) -> object:
+    qs, scales = quantized
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, scales)
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,41 @@
+"""Elastic scaling: re-mesh planning and checkpoint-mediated resharding.
+
+When the healthy device pool changes (node loss, capacity change), training
+resumes on a new mesh: checkpoints are mesh-free (ckpt/checkpoint.py), so the
+restart path is  plan_mesh(n_devices) -> build shardings for the new mesh ->
+restore(..., shardings=new). ``plan_mesh`` picks the largest usable
+(data, model) factorization preserving the model-parallel degree when
+possible (TP degree is a property of the model's layout; DP degree flexes).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def plan_mesh(num_devices: int, prefer_model: int = 1,
+              multi_pod: bool = False, pod_size: int = 0) -> MeshConfig:
+    """Largest mesh <= num_devices. Keeps the model axis at ``prefer_model``
+    when divisible, shrinking it only when unavoidable."""
+    model = prefer_model
+    while model > 1 and num_devices % model:
+        model //= 2
+    data = num_devices // model
+    if multi_pod and pod_size and num_devices % pod_size == 0:
+        pods = num_devices // pod_size
+        data = pod_size // model
+        return MeshConfig(shape=(pods, data, model), axes=("pod", "data", "model"))
+    return MeshConfig(shape=(data, model), axes=("data", "model"))
+
+
+def build_mesh(cfg: MeshConfig, devices=None) -> jax.sharding.Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = cfg.num_devices
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    return jax.make_mesh(cfg.shape, cfg.axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.axes),
+                         devices=devices[:n])

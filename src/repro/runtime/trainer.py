@@ -1,0 +1,144 @@
+"""Trainer: the fault-tolerant training driver.
+
+Responsibilities:
+  * jitted train step (loss + grad + clip + AdamW), with optional gradient
+    accumulation over micro-batches and int8 error-feedback gradient
+    compression for the cross-pod reduction;
+  * deterministic (seed, step)-keyed data — restarts never replay or skip;
+  * async checkpoint every N steps, resume-from-latest on construction;
+  * straggler watchdog + failure-injection hook wired into the step loop.
+
+The same ``make_train_step`` is what the multi-pod dry-run lowers with
+ShapeDtypeStructs — trainer and dry-run share one definition of "a step".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import AsyncCheckpointer, latest_step, restore
+from repro.config import ModelConfig, TrainConfig
+from repro.data.synthetic import SyntheticConfig, SyntheticCorpus
+from repro.models import model
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, compress
+from repro.runtime.fault import FailureInjector
+from repro.runtime.straggler import StragglerWatchdog
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    residual: Any                 # error-feedback residual (compression) or None
+    step: int = 0
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    donate: bool = True, jit: bool = True,
+                    constrain=None) -> Callable:
+    """Returns step(params, opt, residual, tokens) ->
+    (params, opt, residual, metrics). ``jit=False`` returns the raw function
+    (the dry-run jits it itself with explicit in/out shardings);
+    ``constrain`` pins the residual-stream sharding (launch/sharding.py)."""
+    use_comp = tcfg.grad_compression == "int8_ef"
+
+    def step_fn(params, opt, residual, tokens):
+        def loss_of(p, batch):
+            return model.loss_fn(p, cfg, batch, remat=tcfg.remat,
+                                 constrain=constrain)
+
+        if tcfg.micro_batches > 1:
+            mb = tokens.reshape((tcfg.micro_batches,
+                                 tokens.shape[0] // tcfg.micro_batches) +
+                                tokens.shape[1:])
+
+            def acc_body(carry, batch):
+                loss, g = jax.value_and_grad(loss_of)(params, batch)
+                a_loss, a_g = carry
+                return (a_loss + loss, jax.tree.map(jnp.add, a_g, g)), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (jnp.float32(0.0), zero_g), mb)
+            loss = loss / tcfg.micro_batches
+            grads = jax.tree.map(lambda g: g / tcfg.micro_batches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, tokens)
+
+        if use_comp:
+            quant, residual = compress.compress_pytree(grads, residual,
+                                                       opt.count)
+            grads = compress.decompress_pytree(quant)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        params, opt = adamw_update(grads, opt, params, tcfg)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, opt, residual, metrics
+
+    if not jit:
+        return step_fn
+    return jax.jit(step_fn, donate_argnums=(0, 1, 2) if donate else ())
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 data_cfg: Optional[SyntheticConfig] = None,
+                 batch_size: int = 8, seq_len: int = 128,
+                 injector: Optional[FailureInjector] = None,
+                 resume: bool = True):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.batch_size, self.seq_len = batch_size, seq_len
+        self.corpus = SyntheticCorpus(data_cfg or SyntheticConfig(
+            vocab_size=cfg.vocab_size, seed=tcfg.seed))
+        self.injector = injector
+        self.watchdog = StragglerWatchdog()
+        self.ckpt = AsyncCheckpointer(tcfg.checkpoint_dir)
+        self.metrics_log: List[Dict[str, float]] = []
+
+        params = model.init(jax.random.PRNGKey(tcfg.seed), cfg)
+        opt = adamw_init(params)
+        residual = (compress.init_residual(params)
+                    if tcfg.grad_compression == "int8_ef" else jnp.zeros(()))
+        self.state = TrainState(params=params, opt=opt, residual=residual, step=0)
+        if resume and latest_step(tcfg.checkpoint_dir) is not None:
+            tmpl = {"params": self.state.params, "opt": self.state.opt,
+                    "residual": self.state.residual}
+            step, tree = restore(tcfg.checkpoint_dir, tmpl)
+            self.state = TrainState(params=tree["params"], opt=tree["opt"],
+                                    residual=tree["residual"], step=step)
+        self._step_fn = make_train_step(cfg, tcfg)
+
+    def save(self):
+        self.ckpt.save(self.state.step,
+                       {"params": self.state.params, "opt": self.state.opt,
+                        "residual": self.state.residual},
+                       metadata={"model": self.cfg.name})
+
+    def run(self, steps: Optional[int] = None) -> int:
+        end = self.tcfg.steps if steps is None else self.state.step + steps
+        while self.state.step < end:
+            step = self.state.step
+            if self.injector is not None:
+                self.injector.maybe_fail(step)
+            batch = jnp.asarray(self.corpus.batch(step, self.batch_size,
+                                                  self.seq_len), jnp.int32)
+            t0 = time.perf_counter()
+            params, opt, residual, metrics = self._step_fn(
+                self.state.params, self.state.opt, self.state.residual, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self.watchdog.observe(step, dt)
+            self.state = TrainState(params=params, opt=opt, residual=residual,
+                                    step=step + 1)
+            metrics["step"] = step
+            metrics["time_s"] = dt
+            self.metrics_log.append(metrics)
+            if (step + 1) % self.tcfg.checkpoint_every == 0 or step + 1 == end:
+                self.save()
+        self.ckpt.wait()
+        return self.state.step

@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS device override here — smoke tests and benches must see
+# exactly 1 device. Multi-device behavior is tested via subprocesses
+# (tests/test_distributed.py) which set the flag before importing jax.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

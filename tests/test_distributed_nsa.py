@@ -1,0 +1,70 @@
+"""Sequence-sharded NSA decode (shard_map split-KV) must match the
+single-device reference — run in an 8-device subprocess."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_sharded_nsa_decode_matches_ref():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.config import ModelConfig, NSAConfig
+        from repro.models import model, nsa as nsa_lib, nsa_sharded
+        from repro.launch.mesh import make_test_mesh
+
+        nsa = NSAConfig(cmp_block=8, cmp_stride=4, sel_block=16, n_selected=4,
+                        window=32)
+        cfg = ModelConfig(name="t", num_layers=1, d_model=64, num_heads=4,
+                          num_kv_heads=2, d_ff=128, vocab_size=97,
+                          dtype="float32", attention="nsa", nsa=nsa)
+        key = jax.random.PRNGKey(0)
+        p = model.init(key, cfg)
+        bp = jax.tree.map(lambda a: a[0], p["segments"][0][0])
+        toks = jax.random.randint(key, (1, 200), 0, 97)
+        # max_len divisible by 8 shards and by sel_block-unaligned on purpose
+        _, caches = model.prefill(p, cfg, toks, max_len=264)
+        cache = jax.tree.map(lambda a: a[0], caches["segments"][0][0])
+        prefix = 200
+        x = jax.random.normal(key, (1, 1, 64))
+        positions = jnp.full((1, 1), prefix, jnp.int32)
+        tm = jnp.ones((1, 1, 1), bool)
+
+        # reference (single device)
+        out_ref, (k_new, v_new), _ = nsa_lib.nsa_verify_ref(
+            bp["mix"], cfg, x, cache["kv"], cache["cmp"], prefix, positions, tm)
+
+        # sharded
+        mesh = make_test_mesh(4, 2)
+        seq_axes = ("data", "model")
+        shard = NamedSharding(mesh, P(None, ("data", "model"), None, None))
+        kv_s = {"k": jax.device_put(cache["kv"]["k"], shard),
+                "v": jax.device_put(cache["kv"]["v"], shard)}
+        # cmp cache padded (init_cmp_cache pads to 8-multiple at small scale)
+        cmp_s = {"k_cmp": jax.device_put(cache["cmp"]["k_cmp"], shard),
+                 "v_cmp": jax.device_put(cache["cmp"]["v_cmp"], shard)}
+        with mesh:
+            out_s, kv2, _ = nsa_sharded.nsa_attend_decode_sharded(
+                bp["mix"], cfg, mesh, x, kv_s, cmp_s, jnp.int32(prefix),
+                seq_axes)
+        err = float(jnp.abs(out_ref.astype(jnp.float32) -
+                            out_s.astype(jnp.float32)).max())
+        scalemax = float(jnp.abs(out_ref).max())
+        print("err", err, "scale", scalemax)
+        assert err < 1e-3 * max(scalemax, 1.0), err
+        # cache commit: new K written at position prefix
+        got_k = np.asarray(kv2["k"][0, prefix])
+        np.testing.assert_allclose(got_k, np.asarray(k_new[0, 0]),
+                                   rtol=1e-5, atol=1e-6)
+        print("SHARDED_NSA_OK")
+    """)
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=420, env=env)
+    assert p.returncode == 0, p.stderr[-3000:]
+    assert "SHARDED_NSA_OK" in p.stdout

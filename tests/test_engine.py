@@ -1,0 +1,132 @@
+"""End-to-end engine tests: the Strict-mode exactness invariant (SSV output
+== autoregressive greedy output), approx/reuse modes, recurrent-arch
+speculation, and the trainer fault-tolerance loop."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (ModelConfig, NSAConfig, RecurrentConfig, ServeConfig,
+                          SSVConfig, TrainConfig)
+from repro.core import draft as draft_lib
+from repro.core import engine as engine_lib
+from repro.models import model
+
+NSA = NSAConfig(cmp_block=8, cmp_stride=4, sel_block=16, n_selected=4, window=32)
+
+
+@pytest.fixture(scope="module")
+def nsa_pair():
+    tcfg = ModelConfig(name="tgt", num_layers=3, d_model=96, num_heads=4,
+                       num_kv_heads=2, d_ff=192, vocab_size=128,
+                       max_seq_len=512, dtype="float32", attention="nsa",
+                       nsa=NSA)
+    dcfg = draft_lib.draft_config(tcfg, num_layers=1)
+    tp = model.init(jax.random.PRNGKey(0), tcfg)
+    dp = model.init(jax.random.PRNGKey(1), dcfg)
+    return tp, tcfg, dp, dcfg
+
+
+def test_strict_equals_autoregressive(nsa_pair):
+    tp, tcfg, dp, dcfg = nsa_pair
+    prompt = np.arange(24) % 128
+    n = 20
+    ar = engine_lib.autoregressive_decode(tp, tcfg, prompt, n, 256)
+    eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, ServeConfig(
+        max_new_tokens=n, temperature=0.0, max_context=256,
+        ssv=SSVConfig(tree_depth=3, tree_width=2, precision_class="Strict"),
+        use_planner=False))
+    res = eng.generate(prompt, max_new_tokens=n)
+    m = min(len(ar.tokens), len(res.tokens))
+    assert m >= n - 2
+    np.testing.assert_array_equal(ar.tokens[:m], res.tokens[:m])
+
+
+def test_reuse_and_approx_generate(nsa_pair):
+    tp, tcfg, dp, dcfg = nsa_pair
+    prompt = np.arange(24) % 128
+    for pc, mode, sched in [("Reuse-only", "exact", (1,)),
+                            ("Approx+Reuse", "approx", (1, 2))]:
+        eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, ServeConfig(
+            max_new_tokens=10, temperature=0.0, max_context=256,
+            ssv=SSVConfig(tree_depth=2, tree_width=2, group_size=2,
+                          group_mode=mode, refresh_schedule=sched,
+                          precision_class=pc),
+            use_planner=False))
+        res = eng.generate(prompt, max_new_tokens=10)
+        assert len(res.tokens) >= 10
+        assert all(0 <= t < tcfg.vocab_size for t in res.tokens)
+
+
+def test_dfs_traversal_and_stochastic(nsa_pair):
+    tp, tcfg, dp, dcfg = nsa_pair
+    prompt = np.arange(16) % 128
+    eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, ServeConfig(
+        max_new_tokens=8, temperature=0.7, max_context=256,
+        ssv=SSVConfig(tree_depth=3, tree_width=2, traversal="dfs"),
+        use_planner=False))
+    res = eng.generate(prompt, max_new_tokens=8)
+    assert len(res.tokens) >= 8
+
+
+def test_recurrent_arch_speculation():
+    """xLSTM (attention-free): verification via state replay must equal AR."""
+    tcfg = ModelConfig(name="x", num_layers=2, d_model=64, num_heads=4,
+                       num_kv_heads=4, d_ff=0, vocab_size=64,
+                       max_seq_len=512, dtype="float32",
+                       block_pattern=("mlstm", "slstm"),
+                       recurrent=RecurrentConfig(kind="mlstm", num_heads=4))
+    dcfg = draft_lib.draft_config(tcfg, num_layers=1)
+    tp = model.init(jax.random.PRNGKey(0), tcfg)
+    dp = model.init(jax.random.PRNGKey(1), dcfg)
+    prompt = np.arange(16) % 64
+    ar = engine_lib.autoregressive_decode(tp, tcfg, prompt, 12, 256)
+    eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, ServeConfig(
+        max_new_tokens=12, temperature=0.0, max_context=256,
+        ssv=SSVConfig(tree_depth=2, tree_width=2, precision_class="Strict"),
+        use_planner=False))
+    res = eng.generate(prompt, max_new_tokens=12)
+    m = min(len(ar.tokens), len(res.tokens))
+    np.testing.assert_array_equal(ar.tokens[:m], res.tokens[:m])
+
+
+def test_trainer_restart_matches_uninterrupted(tmp_path):
+    """Crash + restart must land on the same trajectory (deterministic data
+    + checkpointed state)."""
+    from repro.runtime.fault import FailureInjector, run_with_restarts
+    from repro.runtime.trainer import Trainer
+    cfg = ModelConfig(name="t", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=128,
+                      dtype="float32")
+
+    def run(ckdir, inject):
+        tc = TrainConfig(steps=8, checkpoint_every=4, checkpoint_dir=ckdir,
+                         learning_rate=1e-3, seed=3)
+        inj = FailureInjector(fail_at_steps=[6]) if inject else None
+
+        def driver():
+            tr = Trainer(cfg, tc, batch_size=2, seq_len=32, injector=inj)
+            tr.run()
+            return tr
+
+        if inject:
+            holder = {}
+
+            def d2():
+                holder["tr"] = driver()
+                return holder["tr"].state.step
+            rep = run_with_restarts(d2)
+            assert rep.completed and rep.restarts == 1
+            return holder["tr"]
+        return driver()
+
+    tr_plain = run(str(tmp_path / "a"), inject=False)
+    tr_crash = run(str(tmp_path / "b"), inject=True)
+    la = jax.tree.leaves(tr_plain.state.params)
+    lb = jax.tree.leaves(tr_crash.state.params)
+    for a, b in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,40 @@
+"""Shape/dtype sweep of the flash tree-verification kernel vs its oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash import ops as fops, ref as fref
+
+
+def run(B, T, Hq, Hkv, Dh, S, prefix, window, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def r(*shape):
+        return jnp.asarray(rng.normal(size=shape), dtype)
+    q = r(B, T, Hq, Dh) / np.sqrt(Dh)
+    kc, vc = r(B, S, Hkv, Dh), r(B, S, Hkv, Dh)
+    kd, vd = r(B, T, Hkv, Dh), r(B, T, Hkv, Dh)
+    depths = np.minimum(np.arange(T), 3)
+    positions = jnp.asarray(prefix + depths)[None].repeat(B, 0)
+    tm = jnp.asarray(np.tril(np.ones((T, T), bool)))[None].repeat(B, 0)
+    out_k = fops.flash_verify(q, kc, vc, kd, vd, positions, prefix, tm, window)
+    out_r = fref.ref_flash_verify(q, kc, vc, kd, vd, positions, prefix, tm, window)
+    return np.asarray(out_k, np.float32), np.asarray(out_r, np.float32)
+
+
+@pytest.mark.parametrize("B,T,Hq,Hkv,Dh,S,prefix,window", [
+    (1, 4, 2, 1, 16, 64, 48, 0),
+    (2, 6, 4, 2, 32, 96, 80, 0),
+    (1, 5, 6, 3, 16, 64, 50, 24),
+    (2, 8, 8, 8, 64, 160, 130, 0),
+    (1, 7, 4, 4, 32, 144, 10, 16),   # tiny prefix
+])
+def test_flash_matches_oracle(B, T, Hq, Hkv, Dh, S, prefix, window):
+    out_k, out_r = run(B, T, Hq, Hkv, Dh, S, prefix, window)
+    np.testing.assert_allclose(out_k, out_r, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.bfloat16, 3e-2)])
+def test_flash_bf16(dtype, tol):
+    out_k, out_r = run(1, 4, 4, 2, 32, 96, 80, 0, dtype=dtype)
+    np.testing.assert_allclose(out_k, out_r, rtol=tol, atol=tol)

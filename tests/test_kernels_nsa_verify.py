@@ -1,0 +1,152 @@
+"""Shape/dtype sweeps of the fused NSA verification Pallas kernel
+(interpret=True) against the pure-jnp oracle, plus equivalence of the
+kernel-backed layer paths against the model-level reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, NSAConfig
+from repro.kernels.nsa_verify import ops, ref
+from repro.models import model, nsa as nsa_lib
+
+NSA = NSAConfig(cmp_block=8, cmp_stride=4, sel_block=16, n_selected=4, window=32)
+
+
+def make_inputs(rng, B, T, Hq, Hkv, Dh, S, prefix, dtype=jnp.float32):
+    def r(*shape):
+        return jnp.asarray(rng.normal(size=shape), dtype)
+    ncb = (S - NSA.cmp_block) // NSA.cmp_stride + 1
+    ncb_valid = max(0, (prefix - NSA.cmp_block) // NSA.cmp_stride + 1)
+    q = r(B, T, Hq, Dh) / np.sqrt(Dh)
+    kc, vc = r(B, S, Hkv, Dh), r(B, S, Hkv, Dh)
+    kcmp, vcmp = r(B, ncb, Hkv, Dh), r(B, ncb, Hkv, Dh)
+    kd, vd = r(B, T, Hkv, Dh), r(B, T, Hkv, Dh)
+    gates = jax.nn.sigmoid(r(B, T, 3, Hq)).astype(jnp.float32)
+    depths = np.minimum(np.arange(T), 3)
+    positions = jnp.asarray(prefix + depths)[None].repeat(B, 0)
+    max_blk = max(prefix // NSA.sel_block, 1)
+    sel_idx = jnp.asarray(np.sort(rng.integers(0, max_blk, (B, T, Hkv, NSA.n_selected)),
+                                  axis=-1), jnp.int32)
+    sel_valid = jnp.asarray(rng.random((B, T, Hkv, NSA.n_selected)) < 0.9)
+    tm = np.tril(np.ones((T, T), bool))
+    tree_mask = jnp.asarray(tm)[None].repeat(B, 0)
+    return (q, kc, vc, kcmp, vcmp, kd, vd, sel_idx, sel_valid, positions,
+            prefix, ncb_valid, tree_mask, gates)
+
+
+@pytest.mark.parametrize("B,T,Hq,Hkv,Dh,S,prefix", [
+    (1, 4, 2, 1, 16, 64, 48),
+    (2, 6, 4, 2, 32, 128, 100),
+    (1, 8, 8, 4, 64, 96, 70),
+    (2, 3, 6, 3, 16, 80, 33),   # prefix barely past one cmp block
+])
+@pytest.mark.parametrize("C,mode", [(1, "exact"), (2, "exact"), (3, "exact"),
+                                    (2, "approx"), (4, "approx")])
+def test_kernel_matches_oracle(B, T, Hq, Hkv, Dh, S, prefix, C, mode):
+    rng = np.random.default_rng(B * 100 + T)
+    inp = make_inputs(rng, B, T, Hq, Hkv, Dh, S, prefix)
+    (q, kc, vc, kcmp, vcmp, kd, vd, sel_idx, sel_valid, positions, pl, nv,
+     tm, gates) = inp
+    out_k = ops.nsa_verify_fused(q, kc, vc, kcmp, vcmp, kd, vd, sel_idx,
+                                 sel_valid, positions, pl, nv, tm, gates, NSA,
+                                 C=C, mode=mode)
+    _, _, merged, mvalid, own, _, _ = ops.prepare_groups(
+        q, gates, sel_idx, sel_valid, positions, C, mode, NSA.n_selected)
+    out_r = ref.ref_verify_batched(
+        q, kc, vc, kcmp, vcmp, kd, vd, jnp.where(mvalid > 0, merged, -1),
+        own > 0, positions, pl, nv, tm, gates, group_size=C,
+        sel_block=NSA.sel_block, cmp_block=NSA.cmp_block,
+        cmp_stride=NSA.cmp_stride, window=NSA.window)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4), (jnp.bfloat16, 3e-2)])
+def test_kernel_dtypes(dtype, tol):
+    rng = np.random.default_rng(7)
+    inp = make_inputs(rng, 1, 4, 4, 2, 32, 96, 80, dtype=dtype)
+    (q, kc, vc, kcmp, vcmp, kd, vd, sel_idx, sel_valid, positions, pl, nv,
+     tm, gates) = inp
+    out_k = ops.nsa_verify_fused(q, kc, vc, kcmp, vcmp, kd, vd, sel_idx,
+                                 sel_valid, positions, pl, nv, tm, gates, NSA,
+                                 C=2, mode="exact")
+    _, _, merged, mvalid, own, _, _ = ops.prepare_groups(
+        q, gates, sel_idx, sel_valid, positions, 2, "exact", NSA.n_selected)
+    out_r = ref.ref_verify_batched(
+        q, kc, vc, kcmp, vcmp, kd, vd, jnp.where(mvalid > 0, merged, -1),
+        own > 0, positions, pl, nv, tm, gates, group_size=2,
+        sel_block=NSA.sel_block, cmp_block=NSA.cmp_block,
+        cmp_stride=NSA.cmp_stride, window=NSA.window)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.fixture(scope="module")
+def nsa_model():
+    cfg = ModelConfig(name="t", num_layers=1, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=97, dtype="float32",
+                      attention="nsa", nsa=NSA)
+    key = jax.random.PRNGKey(0)
+    p = model.init(key, cfg)
+    bp = jax.tree.map(lambda a: a[0], p["segments"][0][0])
+    toks = jax.random.randint(key, (2, 100), 0, 97)
+    _, caches = model.prefill(p, cfg, toks, max_len=160)
+    cache = jax.tree.map(lambda a: a[0], caches["segments"][0][0])
+    return cfg, bp, cache
+
+
+def _tree_inputs(key, cfg, prefix, T=5):
+    x = jax.random.normal(key, (2, T, cfg.d_model))
+    parents = [-1, 0, 0, 1, 2]
+    depths = [0, 1, 1, 2, 2]
+    positions = jnp.asarray(prefix + np.asarray(depths))[None].repeat(2, 0)
+    tm = np.zeros((T, T), bool)
+    for i in range(T):
+        j = i
+        while j >= 0:
+            tm[i, j] = True
+            j = parents[j]
+    return x, positions, jnp.asarray(tm)[None].repeat(2, 0)
+
+
+def test_refresh_layer_matches_model_ref(nsa_model):
+    cfg, bp, cache = nsa_model
+    x, positions, tm = _tree_inputs(jax.random.PRNGKey(1), cfg, 100)
+    out_ref, _, (si, sv) = nsa_lib.nsa_verify_ref(
+        bp["mix"], cfg, x, cache["kv"], cache["cmp"], 100, positions, tm)
+    out_k, _, (si2, _) = ops.nsa_verify_kernel_layer(
+        bp["mix"], cfg, x, cache["kv"], cache["cmp"], 100, positions, tm,
+        C=2, mode="exact", reuse=False)
+    assert (si == si2).all()
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_reuse_layer_matches_model_ref(nsa_model):
+    cfg, bp, cache = nsa_model
+    x, positions, tm = _tree_inputs(jax.random.PRNGKey(2), cfg, 100)
+    _, _, (si, sv) = nsa_lib.nsa_verify_ref(
+        bp["mix"], cfg, x, cache["kv"], cache["cmp"], 100, positions, tm)
+    out_ref = nsa_lib.nsa_verify_ref(
+        bp["mix"], cfg, x, cache["kv"], cache["cmp"], 100, positions, tm,
+        sel_idx=si, sel_valid=sv)[0]
+    out_k, _, _ = ops.nsa_verify_kernel_layer(
+        bp["mix"], cfg, x, cache["kv"], cache["cmp"], 100, positions, tm,
+        sel_idx=si, sel_valid=sv, C=2, mode="exact", reuse=True)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_vanilla_baseline_matches_model_ref(nsa_model):
+    cfg, bp, cache = nsa_model
+    x, positions, tm = _tree_inputs(jax.random.PRNGKey(3), cfg, 100)
+    out_ref = nsa_lib.nsa_verify_ref(
+        bp["mix"], cfg, x, cache["kv"], cache["cmp"], 100, positions, tm)[0]
+    out_v, _, _ = ops.nsa_verify_vanilla_layer(
+        bp["mix"], cfg, x, cache["kv"], cache["cmp"], 100, positions, tm)
+    np.testing.assert_allclose(np.asarray(out_v, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,152 @@
+"""NSA-semantics tests: selection properties (hypothesis), compression-cache
+incremental consistency, refresh/reuse behavior, grouping approximation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ModelConfig, NSAConfig, SSVConfig
+from repro.models import model, nsa as nsa_lib
+
+NSA = NSAConfig(cmp_block=8, cmp_stride=4, sel_block=16, n_selected=4, window=32)
+CFG = ModelConfig(name="t", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=97, dtype="float32",
+                  attention="nsa", nsa=NSA, max_seq_len=512)
+
+
+@given(seed=st.integers(0, 100), prefix=st.integers(20, 120),
+       depth=st.integers(0, 3))
+@settings(max_examples=30, deadline=None)
+def test_selection_properties(seed, prefix, depth):
+    rng = np.random.default_rng(seed)
+    B, T, Hkv = 1, 3, 2
+    nsb = nsa_lib.num_sel_blocks(128, NSA)
+    p_slc = jnp.asarray(rng.random((B, T, Hkv, nsb)), jnp.float32)
+    positions = jnp.asarray(prefix + np.arange(T) * max(depth, 1))[None]
+    idx, valid = nsa_lib.select_topn(p_slc, positions, prefix, NSA)
+    idx, valid = np.asarray(idx), np.asarray(valid)
+    starts = np.arange(nsb) * NSA.sel_block
+    for t in range(T):
+        pos = prefix + t * max(depth, 1)
+        for h in range(Hkv):
+            sel = idx[0, t, h][valid[0, t, h]]
+            # causality: selected blocks start within the committed prefix
+            assert (starts[sel] < prefix).all()
+            assert (starts[sel] <= pos).all()
+            # sorted unique
+            assert (np.diff(sel) > 0).all()
+            # mandatory initial block present (if causal)
+            if prefix > 0:
+                assert 0 in sel
+            # mandatory local block: block containing min(pos, prefix-1)
+            lb = min(pos, prefix - 1) // NSA.sel_block
+            assert lb in sel
+
+
+def test_cmp_cache_incremental_matches_full():
+    key = jax.random.PRNGKey(0)
+    B, S, H, Dh = 2, 96, 2, CFG.head_dim
+    k = jax.random.normal(key, (B, S, H, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, Dh))
+    params = nsa_lib.nsa_init(jax.random.PRNGKey(2), CFG)
+    full_k, full_v = nsa_lib.compress_kv(params, k, v, NSA)
+
+    cache = {"k": k, "v": v}
+    cmp_cache = nsa_lib.init_cmp_cache(CFG, B, S)
+    # grow the prefix in uneven chunks, updating incrementally (dyn path)
+    lens = [0, 17, 40, 41, 77, 96]
+    for old, new in zip(lens[:-1], lens[1:]):
+        cmp_cache = nsa_lib.update_cmp_cache_dyn(
+            params, cache, cmp_cache, jnp.int32(old), jnp.int32(new),
+            max_new=((new - old) // NSA.cmp_stride) + 2, nsa=NSA)
+    ncb = nsa_lib.num_cmp_blocks(96, NSA)
+    np.testing.assert_allclose(np.asarray(cmp_cache["k_cmp"][:, :ncb]),
+                               np.asarray(full_k), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cmp_cache["v_cmp"][:, :ncb]),
+                               np.asarray(full_v), rtol=1e-5, atol=1e-5)
+
+
+def test_reuse_schedule_changes_output_but_bounded():
+    """Reuse layers are a controlled approximation: different from
+    all-refresh, but close (same model, same inputs)."""
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, CFG)
+    toks = jax.random.randint(key, (1, 80), 0, 97)
+    _, caches = model.prefill(params, CFG, toks, max_len=160)
+    T = 4
+    positions = jnp.asarray(80 + np.array([0, 1, 1, 2]))[None]
+    tm = np.zeros((T, T), bool)
+    parents = [-1, 0, 0, 1]
+    for i in range(T):
+        j = i
+        while j >= 0:
+            tm[i, j] = True
+            j = parents[j]
+    tm = jnp.asarray(tm)[None]
+    par = jnp.asarray(parents)
+    dt = jax.random.randint(key, (1, T), 0, 97)
+
+    lg_refresh, _ = model.verify_step(params, CFG, caches, dt, positions, tm, par,
+                                      SSVConfig(refresh_schedule=()))
+    lg_reuse, _ = model.verify_step(params, CFG, caches, dt, positions, tm, par,
+                                    SSVConfig(refresh_schedule=(1,)))
+    a = jax.nn.softmax(lg_refresh.astype(jnp.float32), -1)
+    b = jax.nn.softmax(lg_reuse.astype(jnp.float32), -1)
+    tv = 0.5 * float(jnp.abs(a - b).sum(-1).max())
+    assert tv < 0.5  # close but...
+    # layer-0 reuse request is ignored (mandatory refresh)
+    lg_l0, _ = model.verify_step(params, CFG, caches, dt, positions, tm, par,
+                                 SSVConfig(refresh_schedule=(0,)))
+    np.testing.assert_allclose(np.asarray(lg_l0), np.asarray(lg_refresh),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_approx_grouping_controlled_approximation():
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, CFG)
+    toks = jax.random.randint(key, (1, 80), 0, 97)
+    _, caches = model.prefill(params, CFG, toks, max_len=160)
+    T = 6
+    positions = jnp.asarray(80 + np.arange(T))[None]
+    tm = jnp.asarray(np.tril(np.ones((T, T), bool)))[None]
+    par = jnp.asarray([-1, 0, 1, 2, 3, 4])
+    dt = jax.random.randint(key, (1, T), 0, 97)
+    lg_exact, _ = model.verify_step(params, CFG, caches, dt, positions, tm, par,
+                                    SSVConfig(group_mode="exact", group_size=2))
+    lg_approx, _ = model.verify_step(params, CFG, caches, dt, positions, tm, par,
+                                     SSVConfig(group_mode="approx", group_size=2))
+    a = jax.nn.softmax(lg_exact.astype(jnp.float32), -1)
+    b = jax.nn.softmax(lg_approx.astype(jnp.float32), -1)
+    tv = 0.5 * float(jnp.abs(a - b).sum(-1).max())
+    assert 0.0 <= tv < 0.6
+    # exact grouping == no grouping (semantics preserved)
+    lg_none, _ = model.verify_step(params, CFG, caches, dt, positions, tm, par,
+                                   SSVConfig(group_mode="none", group_size=1))
+    np.testing.assert_allclose(np.asarray(lg_exact), np.asarray(lg_none),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_overlap_profiling_positive():
+    """Fig 2/4 reproduction at tiny scale: adjacent verifier queries have
+    positive selected-block overlap (mandatory blocks guarantee > 0)."""
+    from repro.core.overlap import adjacent_overlap
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, CFG)
+    toks = jax.random.randint(key, (1, 100), 0, 97)
+    _, caches = model.prefill(params, CFG, toks, max_len=160)
+    bp = jax.tree.map(lambda a: a[0], params["segments"][0][0])
+    cache = jax.tree.map(lambda a: a[0], caches["segments"][0][0])
+    T = 8
+    positions = jnp.asarray(100 + np.arange(T))[None]
+    x = jax.random.normal(key, (1, T, CFG.d_model))
+    q, _, _ = __import__("repro.models.attention", fromlist=["qkv"]).qkv(
+        bp["mix"], CFG, x, positions)
+    _, p_slc = nsa_lib.routing(bp["mix"], CFG, q, cache["cmp"]["k_cmp"],
+                               cache["cmp"]["v_cmp"], positions, kv_len=160,
+                               ncb_valid=nsa_lib.num_cmp_blocks(100, NSA))
+    idx, val = nsa_lib.select_topn(p_slc, positions, 100, NSA)
+    r = np.asarray(adjacent_overlap(idx, val))
+    assert (r > 0.2).all()  # mandatory init+local blocks force overlap

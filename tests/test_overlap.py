@@ -1,0 +1,73 @@
+"""Property tests for the overlap machinery (merged schedule / shared index)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import overlap
+
+
+@given(seed=st.integers(0, 500), B=st.integers(1, 2), T=st.integers(1, 9),
+       H=st.integers(1, 3), n=st.integers(1, 6), C=st.integers(1, 4),
+       nblocks=st.integers(4, 24))
+@settings(max_examples=60, deadline=None)
+def test_merged_schedule_is_union_with_ownership(seed, B, T, H, n, C, nblocks):
+    rng = np.random.default_rng(seed)
+    idx = np.sort(rng.integers(0, nblocks, (B, T, H, n)), axis=-1)
+    val = rng.random((B, T, H, n)) < 0.8
+    merged, own, mval = overlap.merged_schedule(jnp.asarray(idx),
+                                                jnp.asarray(val), C)
+    merged, own, mval = map(np.asarray, (merged, own, mval))
+    qmap, pad = overlap.group_queries(T, C)
+    G = qmap.shape[0]
+    for b in range(B):
+        for g in range(G):
+            members = [q for k, q in enumerate(qmap[g]) if g * C + k < T]
+            for h in range(H):
+                want = set()
+                for q in members:
+                    want |= set(idx[b, q, h][val[b, q, h]].tolist())
+                got = set(merged[b, g, h][mval[b, g, h]].tolist())
+                assert got == want, (got, want)
+                # sorted + deduped
+                mv = merged[b, g, h][mval[b, g, h]]
+                assert (np.diff(mv) > 0).all()
+                # ownership: slot owned by query c iff block in c's set
+                for k, q in enumerate(qmap[g]):
+                    if g * C + k >= T:
+                        continue
+                    qset = set(idx[b, q, h][val[b, q, h]].tolist())
+                    for s in range(merged.shape[-1]):
+                        if mval[b, g, h, s]:
+                            assert own[b, g, h, k, s] == (merged[b, g, h, s] in qset)
+
+
+@given(seed=st.integers(0, 200), T=st.integers(1, 9), C=st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_shared_index_uses_deepest_member(seed, T, C):
+    rng = np.random.default_rng(seed)
+    B, H, n, nblocks = 1, 2, 3, 16
+    idx = np.sort(rng.integers(0, nblocks, (B, T, H, n)), axis=-1)
+    val = np.ones((B, T, H, n), bool)
+    positions = np.arange(T)[None] + 100
+    out_idx, out_val = overlap.shared_index(jnp.asarray(idx), jnp.asarray(val),
+                                            jnp.asarray(positions), C)
+    out_idx = np.asarray(out_idx)
+    qmap, _ = overlap.group_queries(T, C)
+    for g in range(qmap.shape[0]):
+        members = [q for k, q in enumerate(qmap[g]) if g * C + k < T]
+        rep = max(qmap[g])  # deepest = max position = max index here
+        for q in members:
+            assert (out_idx[0, q] == idx[0, rep]).all()
+
+
+def test_overlap_ratio_bounds_and_symmetry(rng):
+    idx_a = jnp.asarray(rng.integers(0, 10, (2, 4, 2, 4)))
+    idx_b = jnp.asarray(rng.integers(0, 10, (2, 4, 2, 4)))
+    va = jnp.ones((2, 4, 2, 4), bool)
+    r_ab = np.asarray(overlap.overlap_ratio(idx_a, va, idx_b, va))
+    r_ba = np.asarray(overlap.overlap_ratio(idx_b, va, idx_a, va))
+    assert (r_ab >= 0).all() and (r_ab <= 1).all()
+    assert np.allclose(r_ab, r_ba)
+    r_aa = np.asarray(overlap.overlap_ratio(idx_a, va, idx_a, va))
+    assert np.allclose(r_aa, 1.0)

@@ -1,0 +1,88 @@
+"""Planner tests: profile table, Algorithm-1 guard constants, refinement."""
+import numpy as np
+import pytest
+
+from repro.config import SSVConfig
+from repro.core import planner as P
+
+
+def _flat_profile(expected_accept=4.0, n=3):
+    entries = [P.ProfileEntry(
+        SSVConfig(tree_depth=3 + i, tree_width=2, precision_class="Strict"),
+        expected_accept - 0.5 * i, 0.01 + 0.001 * i) for i in range(n)]
+    table = {(b, pc): list(entries) for b in range(4)
+             for pc in P.PRECISION_CLASSES}
+    return P.Profile(table=table)
+
+
+def test_candidate_strategies_respect_class():
+    for pc in P.PRECISION_CLASSES:
+        mode, reuse = P.class_constraints(pc)
+        for s in P.candidate_strategies(pc, num_layers=8):
+            assert s.group_mode == mode
+            assert (len(s.refresh_schedule) > 0) == reuse
+            assert s.precision_class == pc
+            assert 0 not in s.refresh_schedule  # layer 0 always refreshes
+
+
+def test_guard_triggers_after_warmup_and_hysteresis():
+    pl = P.RuntimePlanner(_flat_profile(expected_accept=4.0), "Strict")
+    pl.begin_request(context_len=100)
+    assert pl.rank == 0
+    # 7 bad steps: below warmup m=8 -> no switch
+    for _ in range(7):
+        pl.observe(accepted=0, latency_s=0.01)
+    assert pl.rank == 0
+    # reach warmup, then h=5 consecutive below-threshold steps
+    for _ in range(6):
+        pl.observe(accepted=0, latency_s=0.01)
+    assert pl.rank == 1
+    assert pl.refinement_events == 1
+
+
+def test_guard_not_triggered_when_acceptance_good():
+    pl = P.RuntimePlanner(_flat_profile(expected_accept=4.0), "Strict")
+    pl.begin_request(context_len=100)
+    for _ in range(40):
+        pl.observe(accepted=4, latency_s=0.01)
+    assert pl.rank == 0 and pl.refinement_events == 0
+
+
+def test_max_two_transitions():
+    pl = P.RuntimePlanner(_flat_profile(expected_accept=10.0, n=5), "Strict")
+    pl.begin_request(context_len=100)
+    for _ in range(64):
+        pl.observe(accepted=0, latency_s=0.01)
+    assert pl.transitions <= 2
+    # falls back to best explored rank
+    assert pl.rank in (0, 1, 2)
+
+
+def test_ema_alpha():
+    pl = P.RuntimePlanner(_flat_profile(), "Strict")
+    pl.begin_request(context_len=0)
+    pl.observe(accepted=2, latency_s=0.01)
+    pl.observe(accepted=4, latency_s=0.01)
+    assert abs(pl.ema - (0.4 * 4 + 0.6 * 2)) < 1e-9
+
+
+def test_profile_json_roundtrip():
+    prof = _flat_profile()
+    s = prof.to_json()
+    prof2 = P.Profile.from_json(s)
+    e1 = prof.lookup(100, "Strict")[0]
+    e2 = prof2.lookup(100, "Strict")[0]
+    assert e1.strategy == e2.strategy
+    assert e1.expected_accept == e2.expected_accept
+
+
+def test_bucket_of():
+    assert P.bucket_of(0) == 0
+    assert P.bucket_of(5000) == 1
+    assert P.bucket_of(9000) == 2
+    assert P.bucket_of(999999) == 3
+
+
+def test_default_schedule_alternates():
+    s = P.default_schedule(8)
+    assert s == (1, 3, 5, 7)

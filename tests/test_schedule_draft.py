@@ -1,0 +1,96 @@
+"""Refresh/reuse schedule calibration + draft tree expansion + data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, NSAConfig
+from repro.core import draft as draft_lib
+from repro.core import engine as engine_lib
+from repro.core.schedule import greedy_calibrate, kl_divergence
+from repro.core.tree import build_topology
+from repro.models import model
+
+
+def test_kl_divergence_properties():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(4, 16))
+    assert kl_divergence(a, a) < 1e-12
+    b = rng.normal(size=(4, 16))
+    assert kl_divergence(a, b) > 0
+
+
+def test_greedy_calibrate_synthetic():
+    """Layers have known per-layer KL costs; the calibrator must pick the
+    cheap ones first and respect the budget."""
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(8, 32))
+    cost = {1: 0.001, 2: 0.5, 3: 0.002, 4: 0.003, 5: 0.6, 6: 0.004, 7: 0.7}
+
+    def eval_fn(schedule):
+        out = base.copy()
+        for l in schedule:
+            noise = np.random.default_rng(l).normal(size=base.shape)
+            out = out + cost[l] * noise
+        return out
+
+    sched = greedy_calibrate(eval_fn, num_layers=8, kl_budget=0.01)
+    assert 0 not in sched                       # layer 0 never a candidate
+    assert set(sched) <= {1, 3, 4, 6}           # only the cheap layers
+    assert len(sched) >= 2
+
+
+def test_greedy_calibrate_max_reuse():
+    def eval_fn(schedule):
+        return np.zeros((2, 8))                 # zero KL for everything
+    sched = greedy_calibrate(eval_fn, num_layers=6, kl_budget=1.0, max_reuse=2)
+    assert len(sched) == 2
+
+
+@pytest.fixture(scope="module")
+def tiny_pair():
+    cfg = ModelConfig(name="d", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=64,
+                      max_seq_len=256, dtype="float32", attention="nsa",
+                      nsa=NSAConfig(cmp_block=8, cmp_stride=4, sel_block=16,
+                                    n_selected=4, window=32))
+    dcfg = draft_lib.draft_config(cfg, num_layers=1)
+    tp = model.init(jax.random.PRNGKey(0), cfg)
+    dp = model.init(jax.random.PRNGKey(1), dcfg)
+    return tp, cfg, dp, dcfg
+
+
+def test_expand_tree_structure(tiny_pair):
+    """Children tokens are the ranked top-k of the PARENT's draft logits,
+    and node_q rows are valid distributions."""
+    tp, cfg, dp, dcfg = tiny_pair
+    toks = jnp.asarray(np.arange(24) % 64)[None]
+    _, dcaches = model.prefill(dp, dcfg, toks[:, :-1], max_len=128)
+    topo = build_topology(2, 2, "bfs")
+    verify = engine_lib.jit_verify(dcfg, None)
+    tokens, node_q, _ = draft_lib.expand_tree(
+        lambda caches, tk, pos, tm, par: verify(dp, caches, tk, pos, tm, par),
+        dcfg, dcaches, topo, jnp.asarray([int(toks[0, -1])], jnp.int32))
+    tokens = np.asarray(tokens[0])
+    q = np.asarray(node_q[0])
+    assert tokens[0] == int(toks[0, -1])        # pending root preserved
+    ranks = draft_lib.sibling_ranks(topo)
+    for i in range(1, topo.num_nodes):
+        p = int(topo.parents[i])
+        topk = np.argsort(-q[p])[: ranks[i] + 1]
+        assert tokens[i] == topk[ranks[i]]
+    np.testing.assert_allclose(q.sum(-1), 1.0, rtol=1e-4)
+
+
+def test_prefetch_iterator():
+    from repro.data import PrefetchIterator, SyntheticConfig, SyntheticCorpus, token_stream
+    c = SyntheticCorpus(SyntheticConfig(vocab_size=64))
+    it = token_stream(c, batch_size=2, seq_len=16)
+    pf = PrefetchIterator(it, depth=2)
+    steps = []
+    for _ in range(3):
+        step, batch = next(pf)
+        steps.append(step)
+        assert batch.shape == (2, 16)
+    assert steps == [0, 1, 2]
+    pf.close()

@@ -1,0 +1,62 @@
+"""End-to-end behaviour tests for the full SSV system: the draft-verify-
+accept loop over a trained-ish model pair, planner integration, and the
+serving CLI surface."""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import (ModelConfig, NSAConfig, ServeConfig, SSVConfig)
+from repro.core import draft as draft_lib
+from repro.core import engine as engine_lib
+from repro.core import planner as P
+from repro.models import model
+
+NSA = NSAConfig(cmp_block=8, cmp_stride=4, sel_block=16, n_selected=4, window=32)
+
+
+@pytest.fixture(scope="module")
+def system():
+    tcfg = ModelConfig(name="sys", num_layers=2, d_model=64, num_heads=4,
+                       num_kv_heads=2, d_ff=128, vocab_size=64,
+                       max_seq_len=512, dtype="float32", attention="nsa",
+                       nsa=NSA)
+    dcfg = draft_lib.draft_config(tcfg, num_layers=1)
+    tp = model.init(jax.random.PRNGKey(0), tcfg)
+    dp = model.init(jax.random.PRNGKey(1), dcfg)
+    return tp, tcfg, dp, dcfg
+
+
+def test_generation_with_planner(system):
+    tp, tcfg, dp, dcfg = system
+    strategies = [SSVConfig(tree_depth=2, tree_width=2, precision_class="Strict"),
+                  SSVConfig(tree_depth=3, tree_width=2, precision_class="Strict")]
+    prof = P.Profile(table={(b, pc): [P.ProfileEntry(s, 2.0, 0.05)
+                                      for s in strategies]
+                            for b in range(4) for pc in P.PRECISION_CLASSES})
+    planner = P.RuntimePlanner(prof, "Strict", warmup_m=2, hysteresis_h=2)
+    eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, ServeConfig(
+        max_new_tokens=12, temperature=0.0, max_context=256,
+        ssv=strategies[0], use_planner=True), planner=planner)
+    res = eng.generate(np.arange(16) % 64, max_new_tokens=12)
+    assert len(res.tokens) >= 12
+    # untrained pair -> low acceptance -> guard fires within the window
+    assert planner.refinement_events >= 1
+    assert planner.transitions <= P.MAX_TRANSITIONS
+
+
+def test_all_precision_classes_generate(system):
+    tp, tcfg, dp, dcfg = system
+    for pc in P.PRECISION_CLASSES:
+        mode, reuse = P.class_constraints(pc)
+        ssv = SSVConfig(tree_depth=2, tree_width=2,
+                        group_size=4 if mode == "approx" else 2,
+                        group_mode=mode,
+                        refresh_schedule=P.default_schedule(tcfg.num_layers)
+                        if reuse else (),
+                        precision_class=pc)
+        eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, ServeConfig(
+            max_new_tokens=6, temperature=0.0, max_context=256, ssv=ssv,
+            use_planner=False))
+        res = eng.generate(np.arange(16) % 64, max_new_tokens=6)
+        assert len(res.tokens) >= 6
+        assert all(0 <= t < tcfg.vocab_size for t in res.tokens)

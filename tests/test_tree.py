@@ -1,0 +1,69 @@
+"""Property tests for draft-tree topologies (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import build_topology, chain_topology, positions_for
+
+
+@given(depth=st.integers(1, 5), width=st.integers(1, 4),
+       order=st.sampled_from(["bfs", "dfs"]),
+       budget=st.integers(0, 20))
+@settings(max_examples=60, deadline=None)
+def test_topology_invariants(depth, width, order, budget):
+    topo = build_topology(depth, width, order, budget)
+    n = topo.num_nodes
+    assert n >= 1
+    assert topo.parents[0] == -1 and topo.depths[0] == 0  # pending root
+    # topological: parents precede children
+    for i in range(1, n):
+        assert 0 <= topo.parents[i] < i
+        assert topo.depths[i] == topo.depths[topo.parents[i]] + 1
+    # mask = ancestor-or-self closure
+    for i in range(n):
+        anc = set()
+        j = i
+        while j >= 0:
+            anc.add(j)
+            j = int(topo.parents[j])
+        assert set(np.where(topo.mask[i])[0]) == anc
+    # budget honored (root excluded)
+    if budget:
+        assert n - 1 <= budget
+    # mask is lower-triangular (flattening is causal)
+    assert not np.triu(topo.mask, 1).any()
+
+
+@given(depth=st.integers(1, 4), width=st.integers(2, 3))
+@settings(max_examples=20, deadline=None)
+def test_bfs_dfs_same_multiset(depth, width):
+    """BFS and DFS orders contain the same (depth, parent-depth) multiset."""
+    a = build_topology(depth, width, "bfs")
+    b = build_topology(depth, width, "dfs")
+    assert a.num_nodes == b.num_nodes
+    assert sorted(a.depths.tolist()) == sorted(b.depths.tolist())
+
+
+def test_dfs_parent_child_adjacency():
+    topo = build_topology(3, 2, "dfs")
+    # in DFS order every non-root node's parent is the immediately preceding
+    # node OR an earlier ancestor on the current chain — first child is
+    # always adjacent to its parent
+    first_children = [i for i in range(1, topo.num_nodes)
+                      if topo.parents[i] == i - 1]
+    assert len(first_children) >= topo.depths.max()
+
+
+def test_paths_cover_leaves():
+    topo = build_topology(3, 2, "bfs")
+    for row in topo.paths:
+        valid = row[row >= 0]
+        assert valid[0] == 0  # paths start at the root
+        for a, b in zip(valid[:-1], valid[1:]):
+            assert topo.parents[b] == a
+
+
+def test_positions():
+    topo = chain_topology(4)
+    pos = positions_for(topo, 100)
+    assert pos.tolist() == [100, 101, 102, 103, 104]
