@@ -50,6 +50,10 @@ def _train(cfg: ModelConfig, steps: int, subdir: str, seed: int):
 def get_models(train_steps: int = 80) -> Tuple[dict, ModelConfig, dict, ModelConfig]:
     """(target_params, target_cfg, draft_params, draft_cfg), cached on disk.
 
+    Suites pass train_steps=25 under ``run.py --quick``; the trainer resumes
+    from the newest checkpoint in the shared cache, so a longer-trained pair
+    is reused as-is and a quick-trained pair is topped up by full runs.
+
     NOTE on acceptance regimes: at this scale greedy (argmax) agreement
     between target and draft is near-binary — both models trained on the
     same peaky synthetic corpus converge to the same argmax function, so

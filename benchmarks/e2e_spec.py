@@ -1,6 +1,22 @@
 """Fig. 8 reproduction: end-to-end generation throughput across draft-tree
-shapes (D, k), SSV variants vs the autoregressive NSA decode baseline."""
+shapes (D, k), SSV variants vs the autoregressive NSA decode baseline.
+
+Also the serving-hot-path regression harness:
+  * per-step phase breakdown (draft / verify+accept / commit wall time) from
+    an instrumented engine run;
+  * host-transfer accounting — asserts the spec-decode loop no longer pulls
+    the (T, vocab) verification logits to the host (only path tokens /
+    counts / bonus cross);
+  * batched-vs-sequential aggregate throughput (BatchedSSVEngine with
+    batch=R vs R sequential SSVEngine.generate calls);
+  * a BENCH_e2e.json snapshot next to the repo root so the perf trajectory
+    is measurable PR over PR.
+"""
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import numpy as np
 
@@ -8,26 +24,36 @@ from benchmarks import common
 from repro.config import ServeConfig, SSVConfig
 from repro.core import engine as engine_lib
 
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_e2e.json")
 
-def main(csv=None, grid=((2, 2), (3, 2), (4, 2), (3, 4)), tokens=48):
+
+def _serve_cfg(ssv, tokens):
+    return ServeConfig(max_new_tokens=tokens, temperature=0.0,
+                       max_context=1024, ssv=ssv, use_planner=False)
+
+
+def main(csv=None, grid=((2, 2), (3, 2), (4, 2), (3, 4)), tokens=48,
+         quick=False, batch=4):
     csv = csv or common.Csv("e2e")
-    tp, tcfg, dp, dcfg = common.get_models()
+    if quick:
+        grid, tokens, batch = ((2, 2), (3, 2)), 12, 2
+    tp, tcfg, dp, dcfg = common.get_models(train_steps=25 if quick else 80)
     prompt = common.prompts(1, 96)[0]
     reuse_sched = tuple(range(1, tcfg.num_layers, 2))
+    report = {"tokens": tokens, "grid": [list(g) for g in grid], "variants": {}}
 
     # autoregressive NSA decode baseline (the paper's 49 tok/s anchor)
     ar = engine_lib.autoregressive_decode(tp, tcfg, prompt, tokens, 1024)
     base_tps = ar.accepted_token_throughput
     csv.row("ar_decode_baseline", 1e6 / max(base_tps, 1e-9), f"{base_tps:.1f}tok/s")
+    report["ar_decode_tok_s"] = base_tps
 
     for (D, k) in grid:
         for variant, sched in (("norefresh", ()), ("reuse", reuse_sched)):
             ssv = SSVConfig(tree_depth=D, tree_width=k, traversal="bfs",
                             group_size=2, group_mode="exact",
                             refresh_schedule=sched)
-            eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, ServeConfig(
-                max_new_tokens=tokens, temperature=0.0, max_context=1024,
-                ssv=ssv, use_planner=False))
+            eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, _serve_cfg(ssv, tokens))
             res = eng.generate(prompt, max_new_tokens=tokens)
             tps = res.accepted_token_throughput
             # tokens-per-target-pass is the hardware-transferable gain: on
@@ -38,6 +64,69 @@ def main(csv=None, grid=((2, 2), (3, 2), (4, 2), (3, 4)), tokens=48):
                     1e6 / max(tps, 1e-9),
                     f"{tps:.1f}tok/s;speedup={tps / max(base_tps, 1e-9):.2f}x;"
                     f"acc={res.mean_accepted:.2f};tok_per_pass={per_pass:.2f}")
+            report["variants"][f"D{D}_k{k}_{variant}"] = {
+                "tok_s": tps, "speedup_vs_ar": tps / max(base_tps, 1e-9),
+                "mean_accepted": res.mean_accepted}
+
+    # ---- per-step phase breakdown (instrumented run: sync between phases)
+    ssv0 = SSVConfig(tree_depth=grid[0][0], tree_width=grid[0][1],
+                     traversal="bfs", group_size=2, group_mode="exact")
+    eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, _serve_cfg(ssv0, tokens),
+                               instrument=True)
+    res = eng.generate(prompt, max_new_tokens=tokens)
+    phases = {}
+    for st in res.steps[1:] or res.steps:     # drop the compile step
+        for k2, v in (st.phases or {}).items():
+            phases.setdefault(k2, []).append(v)
+    breakdown = {k2: float(np.mean(v)) for k2, v in phases.items()}
+    for k2, v in breakdown.items():
+        csv.row(f"step_phase_{k2}", v * 1e6, "mean per-step seconds (instrumented)")
+    report["step_phase_breakdown_s"] = breakdown
+
+    # ---- host-transfer accounting: the fused step returns a few ints, not
+    # (T, vocab) logits
+    T = ssv0.num_draft_tokens() + 1
+    per_step = engine_lib.step_host_transfer_elems(ssv0)
+    logits_elems = T * tcfg.vocab_size
+    assert per_step < logits_elems, (
+        f"spec-decode step transfers {per_step} elems/step — expected far "
+        f"fewer than the {logits_elems} of a (T, vocab) logits pull")
+    observed = max(s.host_elems for s in res.steps)
+    assert observed < logits_elems
+    csv.row("host_transfer_elems_per_step", float(per_step),
+            f"vs_logits={logits_elems};ratio={per_step / logits_elems:.5f}")
+    report["host_transfer"] = {"elems_per_step": per_step,
+                               "logits_elems": logits_elems}
+
+    # ---- batched vs sequential serving throughput
+    prompts = common.prompts(batch, 96, start=200)
+    seq_t0 = time.time()
+    seq_tokens = 0
+    for p in prompts:
+        e = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, _serve_cfg(ssv0, tokens))
+        seq_tokens += len(e.generate(p, max_new_tokens=tokens).tokens)
+    seq_dt = time.time() - seq_t0
+    seq_tps = seq_tokens / max(seq_dt, 1e-9)
+
+    beng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve_cfg(ssv0, tokens))
+    beng.generate_batch(prompts, max_new_tokens=tokens)   # warm the jit
+    bres = beng.generate_batch(prompts, max_new_tokens=tokens)
+    bat_tps = bres.aggregate_throughput
+    csv.row(f"serve_sequential_x{batch}", 1e6 / max(seq_tps, 1e-9),
+            f"{seq_tps:.1f}tok/s_aggregate")
+    csv.row(f"serve_batched_x{batch}", 1e6 / max(bat_tps, 1e-9),
+            f"{bat_tps:.1f}tok/s_aggregate;"
+            f"speedup_vs_sequential={bat_tps / max(seq_tps, 1e-9):.2f}x")
+    report["serving"] = {"batch": batch,
+                         "sequential_tok_s": seq_tps,
+                         "batched_tok_s": bat_tps,
+                         "batched_speedup": bat_tps / max(seq_tps, 1e-9)}
+
+    # quick mode goes to /tmp: the committed baseline only tracks full runs
+    path = "/tmp/BENCH_e2e.quick.json" if quick else BENCH_JSON
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    csv.row("bench_json", 0.0, os.path.abspath(path))
     return csv
 
 

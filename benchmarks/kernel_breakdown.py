@@ -55,19 +55,19 @@ def structural_metrics(nsa: NSAConfig, idx, valid, C, mode, fusion):
     return loads, launches, index_builds
 
 
-def main(csv=None):
+def main(csv=None, quick=False):
     csv = csv or common.Csv("kernel")
     nsa = NSAConfig(cmp_block=8, cmp_stride=4, sel_block=16, n_selected=8,
                     window=64)
     rng = np.random.default_rng(0)
     B, Hkv, Dh, Hq = 1, 2, 32, 4
-    S = 1024
+    S = 512 if quick else 1024
     nblocks = S // nsa.sel_block
     prefix = S - 64
 
-    for gamma in (4, 16):
+    for gamma in ((4,) if quick else (4, 16)):
         T = gamma
-        for s in (2, 4, 6):
+        for s in ((4,) if quick else (2, 4, 6)):
             idx = synth_indices(rng, B, T, Hkv, nsa.n_selected, prefix // nsa.sel_block, s)
             valid = jnp.ones(idx.shape, bool)
             base = None

@@ -12,14 +12,14 @@ from repro.models import attention as attn_lib
 from repro.models import model, nsa as nsa_lib
 
 
-def main(csv=None):
+def main(csv=None, quick=False):
     csv = csv or common.Csv("overlap")
-    tp, cfg, _, _ = common.get_models()
-    prompt = common.prompts(1, 512)[0]
+    tp, cfg, _, _ = common.get_models(train_steps=25 if quick else 80)
+    prefix = 192 if quick else 512
+    prompt = common.prompts(1, prefix)[0]
     toks = jnp.asarray(prompt, jnp.int32)[None]
-    _, caches = model.prefill(tp, cfg, toks, max_len=1024)
-    prefix = 512
-    T = 16
+    _, caches = model.prefill(tp, cfg, toks, max_len=2 * prefix)
+    T = 8 if quick else 16
     positions = jnp.asarray(prefix + np.arange(T))[None]
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (1, T, cfg.d_model), jnp.float32)
@@ -31,7 +31,7 @@ def main(csv=None):
         q, _, _ = attn_lib.qkv(bp["mix"], cfg, x, positions)
         _, p_slc = nsa_lib.routing(bp["mix"], cfg, q, cache["cmp"]["k_cmp"],
                                    cache["cmp"]["v_cmp"], positions,
-                                   kv_len=1024,
+                                   kv_len=2 * prefix,
                                    ncb_valid=nsa_lib.num_cmp_blocks(prefix, cfg.nsa))
         idx, val = nsa_lib.select_topn(p_slc, positions, prefix, cfg.nsa)
         r = float(np.mean(np.asarray(adjacent_overlap(idx, val))))

@@ -23,14 +23,15 @@ PROMPT_LEN = {0: 96, 1: 256}
 GEN_TOKENS = 32
 
 
-def run_engine(tp, tcfg, dp, dcfg, prompt, strategy, planner=None, seed=0):
+def run_engine(tp, tcfg, dp, dcfg, prompt, strategy, planner=None, seed=0,
+               gen_tokens=GEN_TOKENS):
     # temperature 0.7: stochastic acceptance gives graded, prompt-dependent
     # accept rates — the regime the planner navigates (see common.get_models)
     eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, ServeConfig(
-        max_new_tokens=GEN_TOKENS, temperature=0.7, max_context=1024,
+        max_new_tokens=gen_tokens, temperature=0.7, max_context=1024,
         ssv=strategy, use_planner=planner is not None), planner=planner,
         rng_seed=seed)
-    res = eng.generate(prompt, max_new_tokens=GEN_TOKENS)
+    res = eng.generate(prompt, max_new_tokens=gen_tokens)
     return res
 
 
@@ -46,47 +47,56 @@ def candidates(pc, num_layers):
     return out
 
 
-def main(csv=None, classes=("Strict", "Approx+Reuse")):
+def main(csv=None, classes=("Strict", "Approx+Reuse"), quick=False):
     csv = csv or common.Csv("planner")
-    tp, tcfg, dp, dcfg = common.get_models()
+    if quick:
+        classes = ("Strict",)
+    gen_tokens = 8 if quick else GEN_TOKENS
+    buckets = range(1 if quick else len(BUCKETS))
+    tp, tcfg, dp, dcfg = common.get_models(train_steps=25 if quick else 80)
     calib = {b: common.prompts(1, PROMPT_LEN[b], start=300 + 10 * b)
-             for b in range(len(BUCKETS))}
-    held = {b: common.prompts(2, PROMPT_LEN[b], start=700 + 10 * b)
-            for b in range(len(BUCKETS))}
+             for b in buckets}
+    held = {b: common.prompts(1 if quick else 2, PROMPT_LEN[b], start=700 + 10 * b)
+            for b in buckets}
 
     # ---- offline profiling
     table = {}
-    for b in range(len(BUCKETS)):
+    for b in buckets:
         for pc in classes:
             entries = []
-            for strat in candidates(pc, tcfg.num_layers):
-                res = run_engine(tp, tcfg, dp, dcfg, calib[b][0], strat)
+            cands = candidates(pc, tcfg.num_layers)
+            for strat in (cands[:2] if quick else cands):
+                res = run_engine(tp, tcfg, dp, dcfg, calib[b][0], strat,
+                                 gen_tokens=gen_tokens)
                 ea = res.mean_accepted
                 et = float(np.mean([s.latency_s for s in res.steps]))
                 entries.append(P.ProfileEntry(strat, ea, et))
             entries.sort(key=lambda e: -e.throughput)
             table[(b, pc)] = entries
     profile = P.Profile(table={(b, pc): table[(b, pc)]
-                               for b in range(len(BUCKETS)) for pc in classes},
+                               for b in buckets for pc in classes},
                         buckets=BUCKETS)
 
     base_strat = SSVConfig(tree_depth=3, tree_width=2, traversal="bfs",
                            group_size=2, group_mode="exact",
                            precision_class="Strict")
 
-    for b in range(len(BUCKETS)):
+    for b in buckets:
         for pc in classes:
             tps = {"base": [], "static": [], "bestR": []}
             rr = False
             for prompt in held[b]:
-                r0 = run_engine(tp, tcfg, dp, dcfg, prompt, base_strat)
+                r0 = run_engine(tp, tcfg, dp, dcfg, prompt, base_strat,
+                                gen_tokens=gen_tokens)
                 tps["base"].append(r0.accepted_token_throughput)
                 r1 = run_engine(tp, tcfg, dp, dcfg, prompt,
-                                profile.table[(b, pc)][0].strategy)
+                                profile.table[(b, pc)][0].strategy,
+                                gen_tokens=gen_tokens)
                 tps["static"].append(r1.accepted_token_throughput)
                 pl = P.RuntimePlanner(profile, pc)
                 r2 = run_engine(tp, tcfg, dp, dcfg, prompt,
-                                profile.table[(b, pc)][0].strategy, planner=pl)
+                                profile.table[(b, pc)][0].strategy, planner=pl,
+                                gen_tokens=gen_tokens)
                 tps["bestR"].append(r2.accepted_token_throughput)
                 rr |= pl.refinement_events > 0
             base, static, bestr = (float(np.mean(tps[k]))

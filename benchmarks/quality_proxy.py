@@ -36,11 +36,12 @@ def ppl_under(tp, cfg, caches, toks, ssv):
     return float(jnp.exp(-ll.mean()))
 
 
-def main(csv=None):
+def main(csv=None, quick=False):
     csv = csv or common.Csv("quality")
-    tp, cfg, dp, dcfg = common.get_models()
+    tp, cfg, dp, dcfg = common.get_models(train_steps=25 if quick else 80)
     reuse_sched = tuple(range(1, cfg.num_layers, 2))
-    held = common.prompts(4, 160, start=500)
+    held = common.prompts(2 if quick else 4, 160, start=500)
+    gen_tokens = 8 if quick else 32
 
     variants = {
         "ssv_exact": SSVConfig(group_mode="exact", group_size=2),
@@ -66,10 +67,10 @@ def main(csv=None):
     outs = {}
     for name, ssv in variants.items():
         eng = engine_lib.SSVEngine(tp, cfg, dp, dcfg, ServeConfig(
-            max_new_tokens=32, temperature=0.0, max_context=512,
+            max_new_tokens=gen_tokens, temperature=0.0, max_context=512,
             ssv=dataclasses.replace(ssv, tree_depth=3, tree_width=2),
             use_planner=False))
-        outs[name] = eng.generate(prompt, max_new_tokens=32).tokens
+        outs[name] = eng.generate(prompt, max_new_tokens=gen_tokens).tokens
     ref = outs["ssv_exact"]
     for name, o in outs.items():
         m = min(len(ref), len(o))

@@ -33,8 +33,9 @@ def profile():
                             for pc in P.PRECISION_CLASSES})
 
 
-def main(csv=None):
+def main(csv=None, quick=False):
     csv = csv or common.Csv("refinement")
+    reps = 4 if quick else 16
     prof = profile()
     settings = [("default", {}), ("alpha=0.20", {"alpha": 0.20}),
                 ("alpha=0.60", {"alpha": 0.60}), ("rho=0.80", {"rho": 0.80}),
@@ -45,7 +46,7 @@ def main(csv=None):
     base_tps = None
     for name, kw in settings:
         tps, events = [], 0
-        for rep in range(16):
+        for rep in range(reps):
             pl = P.RuntimePlanner(prof, "Strict", **kw)
             t, e = synthetic_run(pl, np.random.default_rng(rep))
             tps.append(t)

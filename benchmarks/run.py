@@ -3,8 +3,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run              # everything
   PYTHONPATH=src python -m benchmarks.run --only e2e   # one suite
+  PYTHONPATH=src python -m benchmarks.run --quick      # CPU-sized shapes,
+                                                       # seconds not minutes
 """
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -21,10 +24,24 @@ SUITES = [
 ]
 
 
-def main() -> None:
+def run_suite(modname: str, quick: bool) -> None:
+    mod = __import__(modname, fromlist=["main"])
+    kwargs = {}
+    if quick and "quick" in inspect.signature(mod.main).parameters:
+        kwargs["quick"] = True
+    mod.main(**kwargs)
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes/token counts so every suite finishes in "
+                         "seconds — the tier-1 smoke-test mode")
+    args = ap.parse_args(argv)
+    if args.only and args.only not in {n for n, _ in SUITES}:
+        ap.error(f"unknown suite {args.only!r}; choose from "
+                 f"{', '.join(n for n, _ in SUITES)}")
     print("name,us_per_call,derived")
     failures = 0
     for name, modname in SUITES:
@@ -32,8 +49,7 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            mod = __import__(modname, fromlist=["main"])
-            mod.main()
+            run_suite(modname, args.quick)
             print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
         except Exception:
             failures += 1

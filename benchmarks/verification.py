@@ -35,9 +35,11 @@ def bench_verify(tp, cfg, caches, gamma: int, ssv, csv, label):
     return t
 
 
-def main(csv=None, sweep_gamma=(4, 16, 32), contexts=(512, 1024)):
+def main(csv=None, sweep_gamma=(4, 16, 32), contexts=(512, 1024), quick=False):
     csv = csv or common.Csv("verification")
-    tp, cfg, _, _ = common.get_models()
+    if quick:
+        sweep_gamma, contexts = (4,), (256,)
+    tp, cfg, _, _ = common.get_models(train_steps=25 if quick else 80)
     reuse_sched = tuple(range(1, cfg.num_layers, 2))  # paper: alternating
 
     for N in contexts:

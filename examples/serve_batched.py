@@ -1,7 +1,14 @@
-"""Serve a stream of batched requests with SSV speculative decoding + the
-profile-guided planner — the serving-side end-to-end driver.
+"""Serve a stream of batched requests with SSV speculative decoding — the
+serving-side end-to-end driver.
+
+Default mode runs the device-resident `BatchedSSVEngine`: one vectorized
+draft→verify→accept→commit launch per step advances every request, with
+per-request committed lengths and completion masks. `--sequential` falls back
+to looping single-stream `SSVEngine.generate` calls (the old path) so the
+aggregate-throughput win of true batching is directly measurable:
 
   PYTHONPATH=src python examples/serve_batched.py --requests 4
+  PYTHONPATH=src python examples/serve_batched.py --requests 4 --sequential
 """
 import argparse
 import time
@@ -17,14 +24,7 @@ from repro.data.synthetic import SyntheticConfig, SyntheticCorpus
 from repro.models import model
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--precision-class", default="Reuse-only",
-                    choices=list(P.PRECISION_CLASSES))
-    args = ap.parse_args()
-
+def build_models():
     cfg = ModelConfig(name="serve-nsa", num_layers=4, d_model=128, num_heads=4,
                       num_kv_heads=2, d_ff=256, vocab_size=512,
                       max_seq_len=2048, dtype="float32", attention="nsa",
@@ -32,38 +32,71 @@ def main():
                                     n_selected=4, window=64))
     dcfg = draft_lib.draft_config(cfg, num_layers=1)
     key = jax.random.PRNGKey(0)
-    tp = model.init(key, cfg)
-    dp = model.init(jax.random.fold_in(key, 1), dcfg)
+    return model.init(key, cfg), cfg, model.init(jax.random.fold_in(key, 1), dcfg), dcfg
 
-    # offline profile: tiny synthetic one (normally produced by
-    # benchmarks/planner_eval.py-style calibration); CPU-sized trees
-    mode, reuse = P.class_constraints(args.precision_class)
+
+def build_profile(cfg, precision_class):
+    """Tiny synthetic offline profile (normally produced by
+    benchmarks/planner_eval.py-style calibration); CPU-sized trees."""
+    mode, reuse = P.class_constraints(precision_class)
     sched = P.default_schedule(cfg.num_layers) if reuse else ()
     shapes = [(3, 2, "bfs"), (2, 2, "bfs"), (4, 2, "dfs"), (2, 4, "bfs")]
     entries = [P.ProfileEntry(
         SSVConfig(tree_depth=D, tree_width=k, traversal=t,
                   group_size=4 if mode == "approx" else 2, group_mode=mode,
-                  refresh_schedule=sched, precision_class=args.precision_class),
+                  refresh_schedule=sched, precision_class=precision_class),
         2.0 - 0.2 * i, 0.05) for i, (D, k, t) in enumerate(shapes)]
-    profile = P.Profile(table={(b, pc): list(entries) for b in range(4)
-                               for pc in P.PRECISION_CLASSES})
+    return P.Profile(table={(b, pc): list(entries) for b in range(4)
+                            for pc in P.PRECISION_CLASSES}), entries
 
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--precision-class", default="Reuse-only",
+                    choices=list(P.PRECISION_CLASSES))
+    ap.add_argument("--sequential", action="store_true",
+                    help="loop single-stream SSVEngine instead of the batched engine")
+    args = ap.parse_args()
+
+    tp, cfg, dp, dcfg = build_models()
+    profile, entries = build_profile(cfg, args.precision_class)
     corpus = SyntheticCorpus(SyntheticConfig(vocab_size=cfg.vocab_size))
     queue = [corpus.batch(i, 1, 48 + 16 * (i % 3))[0]
              for i in range(args.requests)]
+    serve_cfg = ServeConfig(max_new_tokens=args.tokens, temperature=0.0,
+                            max_context=1024, ssv=entries[0].strategy,
+                            use_planner=True)
 
-    total_tokens, t0 = 0, time.time()
-    for i, prompt in enumerate(queue):
+    t0 = time.time()
+    if args.sequential:
+        total_tokens = 0
+        for i, prompt in enumerate(queue):
+            planner = P.RuntimePlanner(profile, args.precision_class)
+            eng = engine_lib.SSVEngine(tp, cfg, dp, dcfg, serve_cfg,
+                                       planner=planner)
+            res = eng.generate(prompt, max_new_tokens=args.tokens)
+            total_tokens += len(res.tokens)
+            strat = planner.current()
+            print(f"req {i}: ctx {len(prompt)} -> {len(res.tokens)} tokens, "
+                  f"{res.accepted_token_throughput:.1f} tok/s, "
+                  f"strategy D{strat.tree_depth}k{strat.tree_width}/{strat.traversal}, "
+                  f"refinements={planner.refinement_events}")
+    else:
+        # one planner for the whole batch: the strategy (hence tree topology)
+        # is shared across rows so the step stays a single vectorized launch
         planner = P.RuntimePlanner(profile, args.precision_class)
-        eng = engine_lib.SSVEngine(tp, cfg, dp, dcfg, ServeConfig(
-            max_new_tokens=args.tokens, temperature=0.0, max_context=1024,
-            ssv=entries[0].strategy, use_planner=True), planner=planner)
-        res = eng.generate(prompt, max_new_tokens=args.tokens)
-        total_tokens += len(res.tokens)
+        eng = engine_lib.BatchedSSVEngine(tp, cfg, dp, dcfg, serve_cfg,
+                                          planner=planner)
+        batch = eng.generate_batch(queue, max_new_tokens=args.tokens)
+        total_tokens = batch.total_tokens
         strat = planner.current()
-        print(f"req {i}: ctx {len(prompt)} -> {len(res.tokens)} tokens, "
-              f"{res.accepted_token_throughput:.1f} tok/s, "
-              f"strategy D{strat.tree_depth}k{strat.tree_width}/{strat.traversal}, "
+        for i, res in enumerate(batch.results):
+            print(f"req {i}: ctx {len(queue[i])} -> {len(res.tokens)} tokens, "
+                  f"mean accepted/step {res.mean_accepted:.2f}")
+        print(f"batched: {batch.steps} fused steps, strategy "
+              f"D{strat.tree_depth}k{strat.tree_width}/{strat.traversal}, "
               f"refinements={planner.refinement_events}")
     dt = time.time() - t0
     print(f"served {args.requests} requests, {total_tokens} tokens "

@@ -1,7 +1,6 @@
 """Speculative accept/reject over draft trees.
 
-Two rules, both host-side (gamma <= 128 — the per-step cost is negligible and
-keeping the dynamic control flow off-device mirrors production engines):
+Two rules, each with a host (numpy) and a device (pure ``jnp``) form:
 
 * greedy (temperature 0): walk from the root; a child is accepted iff its
   token equals the target argmax at its parent's context. The bonus token is
@@ -12,15 +11,25 @@ keeping the dynamic control flow off-device mirrors production engines):
   tried in order; child c with token t is accepted w.p. min(1, p(t)/q(t));
   on rejection p <- normalize(max(p - q, 0)). If all children are rejected,
   the bonus is sampled from the residual.
+
+The device forms (`greedy_tree_accept_device`, `stochastic_tree_accept_device`)
+run the walk as a fixed-length `lax.scan` over the static children matrix, so
+they fuse into the jitted verification step and only a handful of ints ever
+cross to the host. Randomness is injected as explicit uniform arrays with a
+fixed consumption layout (`accept_u[round, child_rank]`, one `bonus_u`), and
+the host forms consume the same layout — host and device are bit-compatible
+given the same uniforms (see tests/test_accept_device.py).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tree import TreeTopology
+from repro.core.tree import TreeTopology, children_matrix
 
 
 @dataclasses.dataclass
@@ -69,55 +78,180 @@ def greedy_tree_accept(topo: TreeTopology, draft_tokens: np.ndarray,
 
 
 def _softmax(x: np.ndarray, temperature: float = 1.0) -> np.ndarray:
-    x = x.astype(np.float64) / max(temperature, 1e-6)
+    # float32 to match the on-device form bit-for-bit (x64 is disabled there)
+    x = x.astype(np.float32) / np.float32(max(temperature, 1e-6))
     x = x - x.max()
     e = np.exp(x)
     return e / e.sum()
 
 
-def stochastic_tree_accept(topo: TreeTopology, draft_tokens: np.ndarray,
-                           verify_logits: np.ndarray, node_q: np.ndarray,
-                           rng: np.random.Generator,
-                           temperature: float = 1.0) -> AcceptResult:
-    """SpecInfer-style multi-round rejection sampling over a rooted tree.
+def _inverse_cdf(p: np.ndarray, u: float) -> int:
+    cdf = np.cumsum(p / max(p.sum(), 1e-30))
+    return int(min(np.searchsorted(cdf, u), len(p) - 1))
+
+
+def stochastic_tree_accept_uniforms(topo: TreeTopology, draft_tokens: np.ndarray,
+                                    verify_logits: np.ndarray, node_q: np.ndarray,
+                                    accept_u: np.ndarray, bonus_u: float,
+                                    temperature: float = 1.0) -> AcceptResult:
+    """SpecInfer-style multi-round rejection sampling over a rooted tree,
+    driven by an explicit uniform stream.
 
     node_q: (T, V) draft distribution *at* each node (the distribution its
-    children were drawn from). Output tokens are distributed exactly as the
+    children were drawn from). accept_u: (max_depth + 1, k_max) uniforms —
+    round r's j-th child consumes accept_u[r, j]; bonus_u drives the single
+    inverse-CDF bonus draw. Output tokens are distributed exactly as the
     target model's.
     """
+    maxd = int(topo.depths.max()) if topo.num_nodes else 0
+    if accept_u.shape[0] < maxd + 1:
+        raise ValueError(f"accept_u needs {maxd + 1} rounds (tree depth {maxd} "
+                         f"+ terminal), got {accept_u.shape[0]}")
     ch = children_lists(topo)
     cur = 0
-    p = _softmax(verify_logits[0], temperature)
-    q = node_q[0]
     path: List[int] = [0]
     toks: List[int] = []
-    while True:
-        accepted = None
+    for r in range(accept_u.shape[0]):
+        p = _softmax(verify_logits[cur], temperature)
+        q = node_q[cur].astype(np.float32)
+        accepted: Optional[int] = None
         p_res = p.copy()
-        for c in ch[cur + 1]:
+        for j, c in enumerate(ch[cur + 1]):
             t = int(draft_tokens[c])
             qt = max(float(q[t]), 1e-12)
-            if rng.uniform() < min(1.0, float(p_res[t]) / qt):
+            if accept_u[r, j] < min(1.0, float(p_res[t]) / qt):
                 accepted = c
                 break
             p_res = np.maximum(p_res - q, 0.0)
             s = p_res.sum()
             p_res = p_res / s if s > 0 else np.full_like(p_res, 1.0 / len(p_res))
         if accepted is None:
-            bonus = int(rng.choice(len(p_res), p=p_res / p_res.sum()))
+            # covers both full rejection and leaf exhaustion (no children:
+            # p_res == p untouched, so the bonus is drawn from p itself)
+            bonus = _inverse_cdf(p_res, bonus_u)
             return AcceptResult(path=np.array(path, np.int64),
                                 tokens=np.array(toks + [bonus], np.int64),
                                 bonus=bonus, n_accepted=len(path) - 1)
         path.append(accepted)
         toks.append(int(draft_tokens[accepted]))
-        p = _softmax(verify_logits[accepted], temperature)
-        q = node_q[accepted]
         cur = accepted
-        if not ch[cur + 1]:
-            bonus = int(rng.choice(len(p), p=p))
-            return AcceptResult(path=np.array(path, np.int64),
-                                tokens=np.array(toks + [bonus], np.int64),
-                                bonus=bonus, n_accepted=len(path) - 1)
+    # a walk that accepts at every level reaches a leaf by round maxd, and a
+    # leaf round always terminates via the accepted-is-None branch above
+    raise AssertionError("unreachable: the final round terminates at a leaf")
+
+
+def draw_uniforms(topo: TreeTopology, rng: np.random.Generator):
+    """The (accept_u, bonus_u) layout both accept forms consume: one row per
+    walk round (max_depth + 1: the last round can only terminate), one column
+    per child rank."""
+    maxd = int(topo.depths.max()) if topo.num_nodes else 0
+    kmax = max(1, children_matrix(topo).shape[1])
+    return rng.uniform(size=(maxd + 1, kmax)), float(rng.uniform())
+
+
+def stochastic_tree_accept(topo: TreeTopology, draft_tokens: np.ndarray,
+                           verify_logits: np.ndarray, node_q: np.ndarray,
+                           rng: np.random.Generator,
+                           temperature: float = 1.0) -> AcceptResult:
+    """Rejection sampling with uniforms drawn from ``rng`` (host entry point)."""
+    accept_u, bonus_u = draw_uniforms(topo, rng)
+    return stochastic_tree_accept_uniforms(topo, draft_tokens, verify_logits,
+                                           node_q, accept_u, bonus_u, temperature)
+
+
+# ------------------------------------------------------------------ device
+def greedy_tree_accept_device(child_mat, max_depth: int, draft_tokens,
+                              verify_logits):
+    """Pure-jnp greedy tree accept — fuses into the jitted verify step.
+
+    child_mat: (T, k_max) int32 children of each node in sibling order (-1
+    padded; static per topology); draft_tokens (T,); verify_logits (T, V).
+    Returns (path (max_depth+1,), tokens (max_depth+1,), bonus, n_accepted) —
+    path/tokens padded by repeating the last entry / the bonus, exactly the
+    `pad_path` layout the jitted commit consumes. Matches the host walk
+    (first matching child wins) node-for-node.
+    """
+    draft_tokens = jnp.asarray(draft_tokens)
+    argm = jnp.argmax(jnp.asarray(verify_logits), axis=-1).astype(jnp.int32)  # (T,)
+    child_mat = jnp.asarray(child_mat, jnp.int32)
+
+    def body(carry, _):
+        cur, alive, n_acc = carry
+        kids = child_mat[cur]                                     # (k_max,)
+        toks = draft_tokens[jnp.clip(kids, 0)]
+        match = (toks == argm[cur]) & (kids >= 0)
+        found = match.any() & alive
+        nxt = jnp.where(found, kids[jnp.argmax(match)], cur)
+        return (nxt, found, n_acc + found.astype(jnp.int32)), nxt
+
+    init = (jnp.int32(0), jnp.bool_(True), jnp.int32(0))
+    (cur, _, n_acc), tail = jax.lax.scan(body, init, None, length=max_depth)
+    path = jnp.concatenate([jnp.zeros((1,), jnp.int32), tail])
+    bonus = argm[cur]
+    toks_path = draft_tokens[path[1:]].astype(jnp.int32)
+    tokens = jnp.where(jnp.arange(max_depth) < n_acc, toks_path, bonus)
+    tokens = jnp.concatenate([tokens, bonus[None]])
+    return path, tokens, bonus, n_acc
+
+
+def stochastic_tree_accept_device(child_mat, max_depth: int, draft_tokens,
+                                  verify_logits, node_q, accept_u, bonus_u,
+                                  temperature: float = 1.0):
+    """Pure-jnp multi-round rejection sampling; same uniform-consumption
+    layout as `stochastic_tree_accept_uniforms` (accept_u (max_depth+1, k_max),
+    scalar bonus_u), so host and device walks agree draw-for-draw.
+
+    Returns (path (max_depth+1,), tokens (max_depth+1,), bonus, n_accepted).
+    """
+    T, kmax = child_mat.shape
+    V = verify_logits.shape[-1]
+    child_mat = jnp.asarray(child_mat, jnp.int32)
+    draft_tokens = jnp.asarray(draft_tokens)
+    accept_u = jnp.asarray(accept_u, jnp.float32)
+    p_all = jax.nn.softmax(
+        jnp.asarray(verify_logits).astype(jnp.float32) / max(temperature, 1e-6),
+        axis=-1)
+    q_all = jnp.asarray(node_q).astype(jnp.float32)
+
+    def round_body(carry, r):
+        cur, alive, n_acc, bonus, have_bonus = carry
+        p, q = p_all[cur], q_all[cur]
+        kids = child_mat[cur]
+
+        def child_body(c, j):
+            p_res, acc_node, accepted = c
+            kid = kids[j]
+            valid = (kid >= 0) & (~accepted)
+            t = draft_tokens[jnp.clip(kid, 0)]
+            ratio = p_res[t] / jnp.maximum(q[t], 1e-12)
+            ok = valid & (accept_u[r, j] < jnp.minimum(1.0, ratio))
+            rejected = valid & (~ok)
+            res = jnp.maximum(p_res - q, 0.0)
+            s = res.sum()
+            res = jnp.where(s > 0, res / s, jnp.full_like(res, 1.0 / V))
+            return (jnp.where(rejected, res, p_res),
+                    jnp.where(ok, kid, acc_node), accepted | ok), None
+
+        (p_res, acc_node, accepted), _ = jax.lax.scan(
+            child_body, (p, jnp.int32(0), jnp.bool_(False)), jnp.arange(kmax))
+        found = accepted & alive
+        terminate = alive & (~accepted)
+        cdf = jnp.cumsum(p_res / jnp.maximum(p_res.sum(), 1e-30))
+        draw = jnp.clip(jnp.searchsorted(cdf, bonus_u), 0, V - 1).astype(jnp.int32)
+        bonus = jnp.where(terminate & (~have_bonus), draw, bonus)
+        nxt = jnp.where(found, acc_node, cur)
+        return (nxt, found, n_acc + found.astype(jnp.int32), bonus,
+                have_bonus | terminate), nxt
+
+    init = (jnp.int32(0), jnp.bool_(True), jnp.int32(0), jnp.int32(0),
+            jnp.bool_(False))
+    (cur, _, n_acc, bonus, _), tail = jax.lax.scan(
+        round_body, init, jnp.arange(max_depth + 1))
+    path = jnp.concatenate([jnp.zeros((1,), jnp.int32), tail[:max_depth]])
+    toks_path = draft_tokens[path[1:]].astype(jnp.int32)
+    tokens = jnp.where(jnp.arange(max_depth) < n_acc, toks_path, bonus)
+    tokens = jnp.concatenate([tokens, bonus[None]])
+    return path, tokens, bonus, n_acc
 
 
 def pad_path(path: np.ndarray, pad_to: int) -> np.ndarray:

@@ -8,19 +8,32 @@ Per generation step:
   2. the draft model expands a rooted token tree under the pending token;
   3. the target verifies all nodes in one tree-masked pass — NSA layers run
      the refresh/reuse schedule and exact/approx grouped selection;
-  4. host-side accept/reject picks the longest valid path + a bonus token;
-  5. both models commit the accepted path's K/V (or recurrent states);
+  4. accept/reject picks the longest valid path + a bonus token **on
+     device**, fused into the same jitted step as verification and the
+     target-cache commit — the (T, vocab) verification logits never leave
+     the accelerator; only the accepted path tokens, n_accepted, and the
+     bonus token (a few ints) cross to the host;
+  5. both models commit the accepted path's K/V (or recurrent states) with
+     **donated** cache buffers — commits update the max_context-sized caches
+     in place instead of double-allocating them;
   6. step statistics (A_t, T_t) feed the planner's runtime guard.
+
+The committed sequence length is tracked host-side (updated from the
+n_accepted scalar the loop fetches anyway), so the generate loop never
+blocks on a device sync of ``caches["length"]``.
 
 All device computations are jitted and cached per (config, strategy, tree
 topology) — fixed shapes, no recompilation inside a generation.
+`BatchedSSVEngine` vectorizes the whole step (draft expansion, tree
+verification, accept, donated commits) over a request batch with
+per-request lengths and completion masks.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,11 +42,16 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig, SSVConfig
 from repro.core import accept as accept_lib
 from repro.core import draft as draft_lib
-from repro.core.tree import TreeTopology, build_topology, positions_for
+from repro.core.tree import build_topology, children_matrix
 from repro.models import model
 
 
 # ------------------------------------------------------------ jit caches
+# ModelConfig / SSVConfig are frozen dataclasses — they hash and compare by
+# value, so two equal configs share one cache entry and planner strategy
+# switches never silently recompile inside a generation (each distinct
+# (config, strategy, topology shape) is traced at most once; see
+# tests/test_engine_batched.py::test_jit_cache_keys_by_value).
 @functools.lru_cache(maxsize=64)
 def jit_verify(cfg: ModelConfig, ssv: Optional[SSVConfig]):
     def f(params, caches, tokens, positions, tmask, parents):
@@ -44,16 +62,80 @@ def jit_verify(cfg: ModelConfig, ssv: Optional[SSVConfig]):
 
 @functools.lru_cache(maxsize=64)
 def jit_commit(cfg: ModelConfig):
+    # caches donated: the commit's output KV buffers alias the inputs —
+    # no second max_context-sized allocation per step.
     def f(params, caches, updates, accepted, n_accepted):
         return model.commit(params, cfg, caches, updates, accepted, n_accepted)
-    return jax.jit(f)
+    return jax.jit(f, donate_argnums=(1,))
 
 
 @functools.lru_cache(maxsize=64)
 def jit_prefill(cfg: ModelConfig, max_len: int):
+    # prefill builds the caches from scratch — there is no input cache buffer
+    # to donate; the prompt token array is tiny, so nothing else is worth it.
     def f(params, tokens):
         return model.prefill(params, cfg, tokens, max_len)
     return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=64)
+def jit_verify_accept(cfg: ModelConfig, ssv: SSVConfig, greedy: bool,
+                      temperature: float):
+    """Fused verify → tree-accept → commit step for the target model.
+
+    The tree topology is a pure function of ``ssv`` and is closed over as
+    static arrays. Only the accepted tokens / path / counts are returned to
+    the caller alongside the (donated, updated-in-place) caches — the
+    (T, vocab) logits tensor stays on device.
+
+    Greedy signature:     f(params, caches, tokens)
+    Stochastic signature: f(params, caches, tokens, node_q, accept_u, bonus_u)
+    Returns (new_caches, path (pad,), tokens (pad+1,), bonus, n_accepted_path)
+    where n_accepted_path counts accepted DRAFT nodes (excl. root/bonus) and
+    path/n include the pending root as commit expects.
+    """
+    topo = build_topology(ssv.tree_depth, ssv.tree_width, ssv.traversal,
+                          ssv.tree_budget)
+    depths = jnp.asarray(topo.depths)
+    tmask = jnp.asarray(topo.mask)
+    parents = jnp.asarray(topo.parents)
+    child_mat = jnp.asarray(children_matrix(topo))
+    maxd = int(topo.depths.max()) if topo.num_nodes else 0
+
+    def core(params, caches, tokens, accept_fn):
+        B, T = tokens.shape
+        positions = (depths[None] + caches["length"]).astype(jnp.int32)
+        positions = jnp.broadcast_to(positions, (B, T))
+        logits, updates = model.verify_step(
+            params, cfg, caches, tokens, positions,
+            jnp.broadcast_to(tmask[None], (B, T, T)), parents, ssv)
+        path, out_tokens, bonus, n_acc = accept_fn(tokens[0], logits[0])
+        new_caches = model.commit(params, cfg, caches, updates,
+                                  path[None], (n_acc + 1)[None])
+        return new_caches, path, out_tokens, bonus, n_acc
+
+    if greedy:
+        def f(params, caches, tokens):
+            return core(params, caches, tokens,
+                        lambda tk, lg: accept_lib.greedy_tree_accept_device(
+                            child_mat, maxd, tk, lg))
+    else:
+        def f(params, caches, tokens, node_q, accept_u, bonus_u):
+            return core(params, caches, tokens,
+                        lambda tk, lg: accept_lib.stochastic_tree_accept_device(
+                            child_mat, maxd, tk, lg, node_q[0], accept_u,
+                            bonus_u, temperature))
+    return jax.jit(f, donate_argnums=(1,))
+
+
+def step_host_transfer_elems(ssv: SSVConfig) -> int:
+    """Elements the fused step hands to the host per iteration: the padded
+    accepted-token vector plus the (bonus, n_accepted) scalars. Compare with
+    the T × vocab logits tensor the host-side accept used to pull."""
+    topo = build_topology(ssv.tree_depth, ssv.tree_width, ssv.traversal,
+                          ssv.tree_budget)
+    maxd = int(topo.depths.max()) if topo.num_nodes else 0
+    return (maxd + 1) + 2
 
 
 @dataclasses.dataclass
@@ -63,6 +145,8 @@ class StepStats:
     latency_s: float       # T_t
     gamma: int             # draft tokens verified
     strategy: SSVConfig
+    host_elems: int = 0    # device->host elements fetched this step
+    phases: Optional[Dict[str, float]] = None  # draft/verify_accept/commit (instrumented)
 
 
 @dataclasses.dataclass
@@ -82,20 +166,27 @@ class GenerationResult:
 
 
 class SSVEngine:
-    """Single-sequence (B=1 per stream) speculative serving engine."""
+    """Single-sequence (B=1 per stream) speculative serving engine.
+
+    ``instrument=True`` adds per-phase wall times (draft / verify+accept /
+    commit) to StepStats by blocking between phases — measurement only, it
+    serializes the step and should stay off in production paths.
+    """
 
     def __init__(self, target_params, target_cfg: ModelConfig, draft_params,
                  draft_cfg: ModelConfig, serve_cfg: ServeConfig, planner=None,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, instrument: bool = False):
         self.tp, self.tcfg = target_params, target_cfg
         self.dp, self.dcfg = draft_params, draft_cfg
         self.serve = serve_cfg
         self.planner = planner
         self.rng = np.random.default_rng(rng_seed)
+        self.instrument = instrument
         self.t_caches = None
         self.d_caches = None
         self.pending: Optional[int] = None
         self.prompt_len = 0
+        self.committed_len = 0   # host-side mirror of caches["length"]
 
     # -------------------------------------------------------------- setup
     def start(self, prompt_tokens: np.ndarray):
@@ -108,6 +199,7 @@ class SSVEngine:
         _, self.d_caches = jit_prefill(self.dcfg, max_len)(self.dp, toks[:, :-1])
         self.pending = int(prompt_tokens[-1])
         self.prompt_len = len(prompt_tokens)
+        self.committed_len = self.prompt_len - 1
         if self.planner is not None:
             self.planner.begin_request(context_len=self.prompt_len)
 
@@ -116,7 +208,9 @@ class SSVEngine:
         ssv = strategy or (self.planner.current() if self.planner else self.serve.ssv)
         topo = build_topology(ssv.tree_depth, ssv.tree_width, ssv.traversal,
                               ssv.tree_budget)
+        greedy = self.serve.temperature == 0.0
         t0 = time.perf_counter()
+        phases: Optional[Dict[str, float]] = {} if self.instrument else None
         pending = jnp.asarray([self.pending], jnp.int32)
 
         dverify = jit_verify(self.dcfg, None)
@@ -124,39 +218,46 @@ class SSVEngine:
             lambda caches, tk, pos, tm, par: dverify(self.dp, caches, tk, pos, tm, par),
             self.dcfg, self.d_caches, topo, pending,
             temperature=self.serve.temperature)
+        if phases is not None:
+            jax.block_until_ready(tokens)
+            phases["draft"] = time.perf_counter() - t0
 
         T = topo.num_nodes
-        prefix = self.t_caches["length"]
-        positions = (jnp.asarray(positions_for(topo, 0))[None] + prefix).astype(jnp.int32)
-        tmask = jnp.asarray(topo.mask)[None]
-        parents = jnp.asarray(topo.parents)
-        tverify = jit_verify(self.tcfg, ssv)
-        logits, t_updates = tverify(self.tp, self.t_caches, tokens, positions,
-                                    tmask, parents)
-
-        logits_np = np.asarray(logits[0], np.float32)
-        tokens_np = np.asarray(tokens[0])
-        if self.serve.temperature == 0.0:
-            res = accept_lib.greedy_tree_accept(topo, tokens_np, logits_np)
+        step_fn = jit_verify_accept(self.tcfg, ssv, greedy, self.serve.temperature)
+        t1 = time.perf_counter()
+        if greedy:
+            self.t_caches, path, out_tokens, bonus, n_acc = step_fn(
+                self.tp, self.t_caches, tokens)
         else:
-            res = accept_lib.stochastic_tree_accept(
-                topo, tokens_np, logits_np, np.asarray(node_q[0], np.float32),
-                self.rng, self.serve.temperature)
+            accept_u, bonus_u = accept_lib.draw_uniforms(topo, self.rng)
+            self.t_caches, path, out_tokens, bonus, n_acc = step_fn(
+                self.tp, self.t_caches, tokens,
+                node_q, jnp.asarray(accept_u, jnp.float32),
+                jnp.float32(bonus_u))
+        if phases is not None:
+            jax.block_until_ready(out_tokens)
+            phases["verify_accept"] = time.perf_counter() - t1
 
-        pad_to = int(topo.depths.max()) + 1
-        path = jnp.asarray(accept_lib.pad_path(res.path, pad_to))[None]
-        n_acc = jnp.asarray([res.n_accepted + 1], jnp.int32)  # +1: pending root
-        self.t_caches = jit_commit(self.tcfg)(self.tp, self.t_caches, t_updates,
-                                              path, n_acc)
-        self.d_caches = jit_commit(self.dcfg)(self.dp, self.d_caches, d_updates,
-                                              path, n_acc)
-        self.pending = res.bonus
+        t2 = time.perf_counter()
+        # draft commit consumes the on-device path — no host round-trip
+        self.d_caches = jit_commit(self.dcfg)(
+            self.dp, self.d_caches, d_updates, path[None], (n_acc + 1)[None])
+        # the ONLY device->host transfer of the step: a few ints
+        n = int(n_acc)
+        emitted = np.asarray(out_tokens[: n + 1])
+        self.pending = int(emitted[-1])
+        self.committed_len += n + 1
+        if phases is not None:
+            jax.block_until_ready(jax.tree.leaves(self.d_caches))
+            phases["commit"] = time.perf_counter() - t2
+
         dt = time.perf_counter() - t0
-        stats = StepStats(accepted=res.n_accepted, emitted=res.n_accepted + 1,
-                          latency_s=dt, gamma=T - 1, strategy=ssv)
+        stats = StepStats(accepted=n, emitted=n + 1, latency_s=dt, gamma=T - 1,
+                          strategy=ssv, host_elems=emitted.size + 2,
+                          phases=phases)
         if self.planner is not None:
-            self.planner.observe(accepted=res.n_accepted, latency_s=dt)
-        return list(res.tokens), stats
+            self.planner.observe(accepted=n, latency_s=dt)
+        return [int(t) for t in emitted], stats
 
     # -------------------------------------------------------------- generate
     def generate(self, prompt_tokens: np.ndarray, max_new_tokens: int = 0,
@@ -174,9 +275,225 @@ class SSVEngine:
                     break
             if out and out[-1] == eos_id:
                 break
-            if int(self.t_caches["length"]) + 2 * (st.gamma + 2) >= self.serve.max_context:
+            # host-tracked committed length — no device sync in the loop
+            if self.committed_len + 2 * (st.gamma + 2) >= self.serve.max_context:
                 break
         return GenerationResult(tokens=np.asarray(out), steps=steps)
+
+
+# ------------------------------------------------------------ batched engine
+@dataclasses.dataclass
+class BatchGenerationResult:
+    """Per-request outputs plus aggregate throughput of a batched generate."""
+    results: List[GenerationResult]
+    steps: int
+    wall_s: float
+
+    @property
+    def total_tokens(self) -> int:
+        return int(sum(len(r.tokens) for r in self.results))
+
+    @property
+    def aggregate_throughput(self) -> float:
+        return self.total_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+
+@functools.lru_cache(maxsize=32)
+def jit_batched_step(tcfg: ModelConfig, dcfg: ModelConfig, ssv: SSVConfig,
+                     greedy: bool, temperature: float):
+    """One fully fused, batch-vectorized SSV step.
+
+    The entire draft-expand → tree-verify → accept → commit chain is traced
+    once for a single request row (per-row scalar length, exactly the
+    single-stream semantics) and vmapped over the request batch, then jitted
+    with both models' cache pytrees donated. Per-row lengths diverge freely;
+    an ``active`` flag turns finished rows into no-op commits.
+
+    Greedy signature:     f(tp, dp, t_segs, t_len, d_segs, d_len, pending, active)
+    Stochastic signature: f(..., active, accept_u (R,rounds,kmax), bonus_u (R,))
+      -> (t_segs', t_len', d_segs', d_len', tokens (R, pad+1), n_acc (R,))
+    where segs are the caches' "segments" pytrees with leaf batch axis 1.
+    """
+    topo = build_topology(ssv.tree_depth, ssv.tree_width, ssv.traversal,
+                          ssv.tree_budget)
+    depths = jnp.asarray(topo.depths)
+    tmask = jnp.asarray(topo.mask)
+    parents = jnp.asarray(topo.parents)
+    child_mat = jnp.asarray(children_matrix(topo))
+    maxd = int(topo.depths.max()) if topo.num_nodes else 0
+    T = topo.num_nodes
+
+    def row_core(tp, dp, t_segs, t_len, d_segs, d_len, pending, active,
+                 accept_fn):
+        t_caches = {"segments": jax.tree.map(lambda a: a[:, None], t_segs),
+                    "length": t_len}
+        d_caches = {"segments": jax.tree.map(lambda a: a[:, None], d_segs),
+                    "length": d_len}
+        tokens, node_q, d_updates = draft_lib.expand_tree(
+            lambda caches, tk, pos, tm, par: model.verify_step(
+                dp, dcfg, caches, tk, pos, tm, par, None),
+            dcfg, d_caches, topo, pending[None], temperature=temperature)
+        positions = (depths[None] + t_len).astype(jnp.int32)
+        logits, t_updates = model.verify_step(
+            tp, tcfg, t_caches, tokens, positions, tmask[None], parents, ssv)
+        path, out_tokens, bonus, n_acc = accept_fn(tokens[0], logits[0],
+                                                   node_q[0])
+        n_commit = jnp.where(active, n_acc + 1, 0)[None]
+        new_t = model.commit(tp, tcfg, t_caches, t_updates, path[None], n_commit)
+        new_d = model.commit(dp, dcfg, d_caches, d_updates, path[None], n_commit)
+        return (jax.tree.map(lambda a: a[:, 0], new_t["segments"]),
+                new_t["length"],
+                jax.tree.map(lambda a: a[:, 0], new_d["segments"]),
+                new_d["length"], out_tokens, n_acc)
+
+    if greedy:
+        def row_step(tp, dp, t_segs, t_len, d_segs, d_len, pending, active):
+            return row_core(tp, dp, t_segs, t_len, d_segs, d_len, pending,
+                            active, lambda tk, lg, _q:
+                            accept_lib.greedy_tree_accept_device(
+                                child_mat, maxd, tk, lg))
+        in_axes = (None, None, 1, 0, 1, 0, 0, 0)
+    else:
+        def row_step(tp, dp, t_segs, t_len, d_segs, d_len, pending, active,
+                     accept_u, bonus_u):
+            return row_core(tp, dp, t_segs, t_len, d_segs, d_len, pending,
+                            active, lambda tk, lg, q:
+                            accept_lib.stochastic_tree_accept_device(
+                                child_mat, maxd, tk, lg, q, accept_u,
+                                bonus_u, temperature))
+        in_axes = (None, None, 1, 0, 1, 0, 0, 0, 0, 0)
+
+    f = jax.vmap(row_step, in_axes=in_axes, out_axes=(1, 0, 1, 0, 0, 0))
+    return jax.jit(f, donate_argnums=(2, 3, 4, 5))
+
+
+class BatchedSSVEngine:
+    """True multi-request SSV engine: one device launch per step serves the
+    whole batch, with per-request committed lengths, per-request acceptance,
+    and completion masks. Requests are prefilled independently (exact
+    per-prompt caches) and their cache pytrees stacked along the batch axis.
+
+    The verification strategy is shared across the batch (the tree topology
+    must be uniform for vectorization); a planner, if supplied, observes the
+    mean acceptance over active rows and switches strategy for the batch.
+    """
+
+    def __init__(self, target_params, target_cfg: ModelConfig, draft_params,
+                 draft_cfg: ModelConfig, serve_cfg: ServeConfig, planner=None,
+                 rng_seed: int = 0):
+        self.tp, self.tcfg = target_params, target_cfg
+        self.dp, self.dcfg = draft_params, draft_cfg
+        self.serve = serve_cfg
+        self.planner = planner
+        self.rng = np.random.default_rng(rng_seed)
+        self.t_segs = self.d_segs = None
+        self.t_len = self.d_len = None
+        self.pending: Optional[np.ndarray] = None
+        self.committed_len: Optional[np.ndarray] = None  # host-side (R,)
+        self.batch = 0
+
+    # -------------------------------------------------------------- setup
+    def start(self, prompts: Sequence[np.ndarray]):
+        R = len(prompts)
+        assert R >= 1
+        max_len = self.serve.max_context
+        t_parts, d_parts = [], []
+        for p in prompts:
+            toks = jnp.asarray(np.asarray(p), jnp.int32)[None]
+            _, tc = jit_prefill(self.tcfg, max_len)(self.tp, toks[:, :-1])
+            _, dc = jit_prefill(self.dcfg, max_len)(self.dp, toks[:, :-1])
+            t_parts.append(tc)
+            d_parts.append(dc)
+
+        def stack(parts):
+            segs = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                                *[c["segments"] for c in parts])
+            length = jnp.stack([c["length"] for c in parts])
+            return segs, length
+
+        self.t_segs, self.t_len = stack(t_parts)
+        self.d_segs, self.d_len = stack(d_parts)
+        self.pending = np.array([int(p[-1]) for p in prompts], np.int32)
+        self.committed_len = np.array([len(p) - 1 for p in prompts], np.int64)
+        self.batch = R
+        if self.planner is not None:
+            self.planner.begin_request(
+                context_len=int(np.max([len(p) for p in prompts])))
+
+    # -------------------------------------------------------------- one step
+    def step(self, active: np.ndarray,
+             strategy: Optional[SSVConfig] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """active: (R,) bool — rows to advance. Returns (tokens (R, pad+1),
+        n_accepted (R,)); inactive rows commit nothing (length frozen)."""
+        ssv = strategy or (self.planner.current() if self.planner else self.serve.ssv)
+        greedy = self.serve.temperature == 0.0
+        step_fn = jit_batched_step(self.tcfg, self.dcfg, ssv, greedy,
+                                   self.serve.temperature)
+        args = [self.tp, self.dp, self.t_segs, self.t_len, self.d_segs,
+                self.d_len, jnp.asarray(self.pending), jnp.asarray(active)]
+        if not greedy:
+            topo = build_topology(ssv.tree_depth, ssv.tree_width,
+                                  ssv.traversal, ssv.tree_budget)
+            us = [accept_lib.draw_uniforms(topo, self.rng)
+                  for _ in range(self.batch)]
+            args.append(jnp.asarray(np.stack([u for u, _ in us]), jnp.float32))
+            args.append(jnp.asarray([b for _, b in us], jnp.float32))
+        (self.t_segs, self.t_len, self.d_segs, self.d_len, out_tokens,
+         n_acc) = step_fn(*args)
+        # per-step host transfer: (R, pad+1) token ids + (R,) counts
+        toks_np = np.asarray(out_tokens)
+        n_np = np.asarray(n_acc)
+        live = np.asarray(active, bool)
+        self.pending = np.where(live, toks_np[np.arange(self.batch), n_np],
+                                self.pending).astype(np.int32)
+        self.committed_len = self.committed_len + np.where(live, n_np + 1, 0)
+        return toks_np, n_np
+
+    # -------------------------------------------------------------- generate
+    def generate_batch(self, prompts: Sequence[np.ndarray],
+                       max_new_tokens: int = 0,
+                       eos_id: int = -1) -> BatchGenerationResult:
+        max_new = max_new_tokens or self.serve.max_new_tokens
+        self.start([np.asarray(p) for p in prompts])
+        R = self.batch
+        outs: List[List[int]] = [[] for _ in range(R)]
+        step_logs: List[List[StepStats]] = [[] for _ in range(R)]
+        done = np.zeros((R,), bool)
+        t_start = time.time()
+        n_steps = 0
+        while not done.all():
+            ssv = (self.planner.current() if self.planner else self.serve.ssv)
+            gamma = build_topology(ssv.tree_depth, ssv.tree_width,
+                                   ssv.traversal, ssv.tree_budget).num_nodes - 1
+            t0 = time.perf_counter()
+            toks, n_acc = self.step(active=~done)
+            dt = time.perf_counter() - t0
+            accepted_active = []
+            for r in range(R):
+                if done[r]:
+                    continue
+                n = int(n_acc[r])
+                accepted_active.append(n)
+                step_logs[r].append(StepStats(
+                    accepted=n, emitted=n + 1, latency_s=dt, gamma=gamma,
+                    strategy=ssv, host_elems=toks.shape[1] + 1))
+                for t in toks[r, : n + 1]:
+                    outs[r].append(int(t))
+                    if int(t) == eos_id or len(outs[r]) >= max_new:
+                        done[r] = True
+                        break
+                if self.committed_len[r] + 2 * (gamma + 2) >= self.serve.max_context:
+                    done[r] = True
+            if self.planner is not None and accepted_active:
+                self.planner.observe(accepted=float(np.mean(accepted_active)),
+                                     latency_s=dt)
+            n_steps += 1
+            if n_steps > 4 * max_new + 16:   # safety: shapes guarantee progress
+                break
+        wall = time.time() - t_start
+        results = [GenerationResult(tokens=np.asarray(outs[r]),
+                                    steps=step_logs[r]) for r in range(R)]
+        return BatchGenerationResult(results=results, steps=n_steps, wall_s=wall)
 
 
 # ------------------------------------------------------------ baselines
@@ -190,6 +507,7 @@ def autoregressive_decode(params, cfg: ModelConfig, prompt_tokens: np.ndarray,
     step = jax.jit(lambda p, c, t: model.decode_step(p, cfg, c, t))
     rng = np.random.default_rng(seed)
     cur = jnp.asarray([[int(prompt_tokens[-1])]], jnp.int32)
+    committed = len(prompt_tokens) - 1   # host-side length mirror, no sync
     out: List[int] = []
     steps: List[StepStats] = []
     for _ in range(max_new_tokens):
@@ -206,6 +524,7 @@ def autoregressive_decode(params, cfg: ModelConfig, prompt_tokens: np.ndarray,
         steps.append(StepStats(accepted=0, emitted=1, latency_s=dt, gamma=0,
                                strategy=None))
         cur = jnp.asarray([[nxt]], jnp.int32)
-        if int(caches["length"]) + 2 >= max_context:
+        committed += 1
+        if committed + 2 >= max_context:
             break
     return GenerationResult(tokens=np.asarray(out), steps=steps)

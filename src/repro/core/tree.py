@@ -127,6 +127,25 @@ def build_topology(depth: int, width: int, order: str = "bfs",
                         order=order)
 
 
+def children_matrix(topo: TreeTopology) -> np.ndarray:
+    """(T, k_max) int32: children of each node in sibling order, -1 padded.
+
+    Static per topology — the device-side accept walks scan over it. k_max is
+    the max child count over nodes (>= 1 so the array is never 0-width).
+    """
+    n = topo.num_nodes
+    ch: List[List[int]] = [[] for _ in range(n)]
+    for i in range(n):
+        p = int(topo.parents[i])
+        if p >= 0:
+            ch[p].append(i)
+    kmax = max([len(c) for c in ch] + [1])
+    mat = np.full((n, kmax), -1, np.int32)
+    for i, c in enumerate(ch):
+        mat[i, : len(c)] = c
+    return mat
+
+
 def positions_for(topo: TreeTopology, prefix_len) -> np.ndarray:
     """Absolute positions of flattened nodes: the pending root (depth 0) sits
     at position prefix_len; depth-d draft nodes at prefix_len + d."""

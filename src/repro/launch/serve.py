@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--tokens", type=int, default=64)
     ap.add_argument("--prompts", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=1,
+                    help=">1 serves all prompts through the vectorized "
+                         "BatchedSSVEngine in one fused step per iteration")
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--precision-class", default="Strict",
@@ -61,9 +64,23 @@ def main():
                             use_planner=False)
 
     corpus = SyntheticCorpus(SyntheticConfig(vocab_size=cfg.vocab_size))
+    prompts = [corpus.batch(i, 1, args.prompt_len)[0] for i in range(args.prompts)]
+
+    if args.batch > 1:
+        eng = engine_lib.BatchedSSVEngine(tp, cfg, dp, dcfg, serve_cfg)
+        for lo in range(0, len(prompts), args.batch):
+            group = prompts[lo : lo + args.batch]
+            batch = eng.generate_batch(group, max_new_tokens=args.tokens)
+            for i, res in enumerate(batch.results):
+                print(f"prompt {lo + i}: {len(res.tokens)} tokens, "
+                      f"mean accepted/step {res.mean_accepted:.2f}")
+            print(f"batch[{lo}:{lo + len(group)}]: {batch.total_tokens} tokens in "
+                  f"{batch.wall_s:.2f}s ({batch.aggregate_throughput:.1f} tok/s "
+                  f"aggregate, {batch.steps} fused steps)")
+        return
+
     eng = engine_lib.SSVEngine(tp, cfg, dp, dcfg, serve_cfg)
-    for i in range(args.prompts):
-        prompt = corpus.batch(i, 1, args.prompt_len)[0]
+    for i, prompt in enumerate(prompts):
         res = eng.generate(prompt, max_new_tokens=args.tokens)
         print(f"prompt {i}: {len(res.tokens)} tokens, "
               f"mean accepted/step {res.mean_accepted:.2f}, "

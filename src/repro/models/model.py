@@ -469,7 +469,9 @@ def commit(params, cfg: ModelConfig, caches, seg_updates, accepted, n_accepted):
     path, padded with the last valid entry); n_accepted: (B,) how many are
     real. Appends accepted K/V (or selects the accepted recurrent state) and
     advances length. All shapes static; garbage beyond n_accepted is masked
-    by `length` downstream.
+    by `length` downstream. A row with n_accepted == 0 is a no-op commit
+    (length frozen, recurrent state preserved) — batched serving uses this to
+    freeze finished requests while the rest of the batch keeps stepping.
     """
     old_len = caches["length"]
     B, T_acc = accepted.shape
@@ -498,7 +500,13 @@ def commit(params, cfg: ModelConfig, caches, seg_updates, accepted, n_accepted):
 
                 new_state = jax.tree.map(pick, buf)
                 orig = cache_j["state"]
-                new_state = jax.tree.map(lambda ns, o: ns.astype(o.dtype), new_state, orig)
+                live = n_accepted > 0                                # (B,)
+
+                def keep(ns, o):
+                    m = live.reshape((1, B) + (1,) * (ns.ndim - 2))
+                    return jnp.where(m, ns.astype(o.dtype), o)
+
+                new_state = jax.tree.map(keep, new_state, orig)
                 new_stack.append({"state": new_state})
                 continue
             # attention: gather accepted K/V along the draft axis and append

@@ -1,0 +1,110 @@
+"""Device-side accept parity: the pure-jnp greedy/stochastic tree-accept
+walks (fused into the jitted serving step) must produce exactly the same
+paths, tokens, and bonus as the host numpy implementations, across
+randomized tree topologies. Also re-asserts distribution exactness of the
+uniform-driven stochastic rule (no hypothesis dependency)."""
+import numpy as np
+import pytest
+
+from repro.core import accept as accept_lib
+from repro.core.tree import build_topology, chain_topology, children_matrix
+
+
+def _random_case(seed):
+    rng = np.random.default_rng(seed)
+    depth = int(rng.integers(1, 5))
+    width = int(rng.integers(1, 4))
+    order = ["bfs", "dfs"][int(rng.integers(0, 2))]
+    budget = int(rng.integers(0, 2)) * int(rng.integers(3, 12))
+    topo = build_topology(depth, width, order, budget)
+    V = int(rng.integers(5, 20))
+    # small vocab on purpose: sibling-duplicate tokens exercise the
+    # first-matching-child tie-break the device walk must reproduce
+    tokens = rng.integers(0, V, topo.num_nodes)
+    logits = rng.normal(size=(topo.num_nodes, V)).astype(np.float32)
+    q = rng.dirichlet(np.ones(V), size=topo.num_nodes).astype(np.float32)
+    return rng, topo, tokens, logits, q
+
+
+@pytest.mark.parametrize("block", range(4))
+def test_greedy_device_matches_host(block):
+    for seed in range(block * 40, block * 40 + 40):
+        rng, topo, tokens, logits, _ = _random_case(seed)
+        cm = children_matrix(topo)
+        maxd = int(topo.depths.max())
+        host = accept_lib.greedy_tree_accept(topo, tokens, logits)
+        path, toks, bonus, n_acc = accept_lib.greedy_tree_accept_device(
+            cm, maxd, tokens, logits)
+        n = int(n_acc)
+        assert n == host.n_accepted, seed
+        assert np.array_equal(np.asarray(path)[: n + 1], host.path), seed
+        assert np.array_equal(np.asarray(toks)[: n + 1], host.tokens), seed
+        assert int(bonus) == host.bonus, seed
+        # padding repeats the last path entry (the jitted-commit layout)
+        assert np.all(np.asarray(path)[n:] == host.path[-1]), seed
+
+
+@pytest.mark.parametrize("block", range(4))
+def test_stochastic_device_matches_host(block):
+    for seed in range(block * 40, block * 40 + 40):
+        rng, topo, tokens, logits, q = _random_case(seed)
+        cm = children_matrix(topo)
+        maxd = int(topo.depths.max())
+        accept_u, bonus_u = accept_lib.draw_uniforms(topo, rng)
+        temp = 0.5 + 0.5 * float(rng.uniform())
+        host = accept_lib.stochastic_tree_accept_uniforms(
+            topo, tokens, logits, q, accept_u, bonus_u, temp)
+        path, toks, bonus, n_acc = accept_lib.stochastic_tree_accept_device(
+            cm, maxd, tokens, logits, q, accept_u.astype(np.float32),
+            np.float32(bonus_u), temp)
+        n = int(n_acc)
+        assert n == host.n_accepted, seed
+        assert np.array_equal(np.asarray(path)[: n + 1], host.path), seed
+        assert np.array_equal(np.asarray(toks)[: n + 1], host.tokens), seed
+        assert int(bonus) == host.bonus, seed
+
+
+def test_stochastic_rng_entrypoint_matches_uniform_form():
+    """The rng-drawing wrapper must be a pure re-parameterization of the
+    uniform-driven core."""
+    rng, topo, tokens, logits, q = _random_case(3)
+    r1 = accept_lib.stochastic_tree_accept(topo, tokens, logits, q,
+                                           np.random.default_rng(11), 1.0)
+    au, bu = accept_lib.draw_uniforms(topo, np.random.default_rng(11))
+    r2 = accept_lib.stochastic_tree_accept_uniforms(topo, tokens, logits, q,
+                                                    au, bu, 1.0)
+    assert np.array_equal(r1.path, r2.path)
+    assert np.array_equal(r1.tokens, r2.tokens)
+
+
+def test_stochastic_preserves_target_distribution():
+    """With gamma=1, the emitted first token must be distributed exactly as
+    the target softmax regardless of the draft distribution q (the SpecInfer
+    exactness invariant — kept here free of the hypothesis dependency)."""
+    rng = np.random.default_rng(0)
+    V = 5
+    topo = chain_topology(1)
+    t_logits = np.array([0.0, 1.0, 2.0, -1.0, 0.5], np.float32)
+    p = np.exp(t_logits - t_logits.max())
+    p /= p.sum()
+    q = np.array([0.5, 0.1, 0.1, 0.2, 0.1], np.float32)
+    counts = np.zeros(V)
+    N = 4000
+    for _ in range(N):
+        tok = rng.choice(V, p=q / q.sum())
+        tokens = np.array([0, tok])
+        logits = np.stack([t_logits, t_logits])
+        node_q = np.stack([q, q])
+        res = accept_lib.stochastic_tree_accept(topo, tokens, logits, node_q,
+                                                rng, temperature=1.0)
+        counts[res.tokens[0]] += 1
+    emp = counts / N
+    assert np.abs(emp - p).max() < 0.05, (emp, p)
+
+
+def test_children_matrix_layout():
+    topo = build_topology(2, 2, "bfs")
+    cm = children_matrix(topo)
+    assert cm.shape == (topo.num_nodes, 2)
+    assert cm[0].tolist() == [1, 2]      # root's children in sibling order
+    assert cm[3].tolist() == [-1, -1]    # leaves are -1 padded

@@ -1,0 +1,24 @@
+"""Benchmark-drift guard: every suite in benchmarks/run.py must import and
+run to completion under --quick (CPU-sized shapes). A suite that breaks
+against the current engine/model APIs fails tier-1 here instead of rotting
+silently until the next full benchmark run."""
+import sys
+
+import numpy as np
+import pytest
+
+from benchmarks import run as bench_run
+
+
+@pytest.mark.parametrize("name,modname", bench_run.SUITES,
+                         ids=[n for n, _ in bench_run.SUITES])
+def test_suite_quick(name, modname):
+    bench_run.run_suite(modname, quick=True)
+
+
+def test_runner_cli_quick_only_refinement(capsys):
+    """The runner's --quick/--only plumbing itself (exit-on-failure path is
+    covered by run_suite raising above)."""
+    bench_run.main(["--quick", "--only", "refinement"])
+    out = capsys.readouterr().out
+    assert "refinement" in out and "done" in out
