@@ -5,10 +5,20 @@ Default mode runs the device-resident `BatchedSSVEngine`: one vectorized
 draft→verify→accept→commit launch per step advances every request, with
 per-request committed lengths and completion masks. `--sequential` falls back
 to looping single-stream `SSVEngine.generate` calls (the old path) so the
-aggregate-throughput win of true batching is directly measurable:
+aggregate-throughput win of true batching is directly measurable.
+
+`--continuous` switches the batched engine to continuous batching: requests
+arrive over a Poisson-ish replay (`--arrival-rate` requests per fused step,
+seeded by `--arrival-seed`) and are admitted into `--slots` batch slots as
+rows free up — a per-slot re-prefill lands the new KV prefix in the donated
+batch cache mid-flight, instead of draining the whole batch between waves.
+The run reports per-request queue delay (virtual-step units), mean slot
+occupancy, and aggregate throughput:
 
   PYTHONPATH=src python examples/serve_batched.py --requests 4
   PYTHONPATH=src python examples/serve_batched.py --requests 4 --sequential
+  PYTHONPATH=src python examples/serve_batched.py --requests 8 --continuous \\
+      --slots 4 --arrival-rate 0.5
 """
 import argparse
 import time
@@ -20,6 +30,7 @@ from repro.config import ModelConfig, NSAConfig, ServeConfig, SSVConfig
 from repro.core import draft as draft_lib
 from repro.core import engine as engine_lib
 from repro.core import planner as P
+from repro.core import schedule as schedule_lib
 from repro.data.synthetic import SyntheticConfig, SyntheticCorpus
 from repro.models import model
 
@@ -58,6 +69,16 @@ def main():
                     choices=list(P.PRECISION_CLASSES))
     ap.add_argument("--sequential", action="store_true",
                     help="loop single-stream SSVEngine instead of the batched engine")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: admit arrivals into freed "
+                         "slots mid-flight instead of draining the batch")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="batch slots for --continuous")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="Poisson arrival rate in requests per fused step "
+                         "for --continuous (<=0: all arrive at t=0)")
+    ap.add_argument("--arrival-seed", type=int, default=0,
+                    help="seed for the Poisson arrival replay")
     args = ap.parse_args()
 
     tp, cfg, dp, dcfg = build_models()
@@ -70,7 +91,28 @@ def main():
                             use_planner=True)
 
     t0 = time.time()
-    if args.sequential:
+    if args.continuous:
+        planner = P.RuntimePlanner(profile, args.precision_class)
+        eng = engine_lib.BatchedSSVEngine(tp, cfg, dp, dcfg, serve_cfg,
+                                          planner=planner)
+        arrivals = schedule_lib.poisson_arrivals(
+            args.requests, args.arrival_rate, seed=args.arrival_seed)
+        reqs = [schedule_lib.Request(req_id=i, prompt=queue[i],
+                                     arrival=float(arrivals[i]))
+                for i in range(args.requests)]
+        res = eng.serve_continuous(reqs, num_slots=args.slots,
+                                   max_new_tokens=args.tokens)
+        total_tokens = res.total_tokens
+        for req, gen in zip(res.requests, res.results):
+            delay = (f"{req.queue_delay:.1f}" if req.queue_delay is not None
+                     else "n/a (never admitted)")
+            print(f"req {req.req_id}: ctx {len(req.prompt)} -> "
+                  f"{len(gen.tokens)} tokens, arrival {req.arrival:.1f}, "
+                  f"queue delay {delay} steps")
+        print(f"continuous: {res.steps} fused steps over {args.slots} slots, "
+              f"mean occupancy {res.mean_occupancy:.2f}, "
+              f"mean queue delay {res.mean_queue_delay_steps:.1f} steps")
+    elif args.sequential:
         total_tokens = 0
         for i, prompt in enumerate(queue):
             planner = P.RuntimePlanner(profile, args.precision_class)

@@ -6,6 +6,7 @@ accept   — greedy + stochastic (SpecInfer-style) tree acceptance
 overlap  — cross-query overlap stats, merged-schedule / shared-index builders
 engine   — the draft -> sparse-verify -> accept serving loop
 planner  — profile-guided prompt-adaptive orchestration (Algorithm 1)
-schedule — IndexCache-style refresh/reuse greedy calibration
+schedule — continuous-batching request queue/slot scheduler + IndexCache-style
+           refresh/reuse greedy calibration
 """
 from repro.core import accept, draft, engine, overlap, planner, schedule, tree  # noqa: F401

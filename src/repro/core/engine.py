@@ -42,6 +42,7 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig, SSVConfig
 from repro.core import accept as accept_lib
 from repro.core import draft as draft_lib
+from repro.core import schedule as schedule_lib
 from repro.core.tree import build_topology, children_matrix
 from repro.models import model
 
@@ -309,8 +310,17 @@ def jit_batched_step(tcfg: ModelConfig, dcfg: ModelConfig, ssv: SSVConfig,
     with both models' cache pytrees donated. Per-row lengths diverge freely;
     an ``active`` flag turns finished rows into no-op commits.
 
-    Greedy signature:     f(tp, dp, t_segs, t_len, d_segs, d_len, pending, active)
-    Stochastic signature: f(..., active, accept_u (R,rounds,kmax), bonus_u (R,))
+    Continuous batching rides on per-row ADMISSION masks: a row with
+    ``admit_mask`` set had a fresh KV prefix written into its cache row by
+    the per-slot re-prefill (see ``admit_row_segments``), and this launch
+    resets its device length and pending root from ``admit_len`` /
+    ``admit_pending`` before stepping — so one launch serves a mix of
+    freshly-admitted and mid-generation rows without touching other rows.
+
+    Greedy signature:     f(tp, dp, t_segs, t_len, d_segs, d_len, pending,
+                            active, admit_mask, admit_len, admit_pending)
+    Stochastic signature: f(..., admit_pending, accept_u (R,rounds,kmax),
+                            bonus_u (R,))
       -> (t_segs', t_len', d_segs', d_len', tokens (R, pad+1), n_acc (R,))
     where segs are the caches' "segments" pytrees with leaf batch axis 1.
     """
@@ -363,8 +373,29 @@ def jit_batched_step(tcfg: ModelConfig, dcfg: ModelConfig, ssv: SSVConfig,
                                 bonus_u, temperature))
         in_axes = (None, None, 1, 0, 1, 0, 0, 0, 0, 0)
 
-    f = jax.vmap(row_step, in_axes=in_axes, out_axes=(1, 0, 1, 0, 0, 0))
+    vstep = jax.vmap(row_step, in_axes=in_axes, out_axes=(1, 0, 1, 0, 0, 0))
+
+    def f(tp, dp, t_segs, t_len, d_segs, d_len, pending, active,
+          admit_mask, admit_len, admit_pending, *rest):
+        t_len = jnp.where(admit_mask, admit_len, t_len)
+        d_len = jnp.where(admit_mask, admit_len, d_len)
+        pending = jnp.where(admit_mask, admit_pending, pending)
+        return vstep(tp, dp, t_segs, t_len, d_segs, d_len, pending, active,
+                     *rest)
+
     return jax.jit(f, donate_argnums=(2, 3, 4, 5))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def admit_row_segments(batch_segs, row_segs, row):
+    """Per-slot re-prefill landing: write a freshly-prefilled single-request
+    cache (leaf batch axis of size 1) into row ``row`` of the batched cache
+    pytree, in place (the batch buffers are donated — no copy of the other
+    rows). ``row`` is a traced argument, so one compile serves every slot."""
+    return jax.tree.map(
+        lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+            b, s.astype(b.dtype), row, axis=1),
+        batch_segs, row_segs)
 
 
 class BatchedSSVEngine:
@@ -372,6 +403,12 @@ class BatchedSSVEngine:
     whole batch, with per-request committed lengths, per-request acceptance,
     and completion masks. Requests are prefilled independently (exact
     per-prompt caches) and their cache pytrees stacked along the batch axis.
+
+    Continuous batching: ``start_empty`` allocates a fixed number of batch
+    slots up front; ``admit`` re-prefills one request into a freed slot
+    (donated in-place row write + per-row admission mask on the next fused
+    step) without perturbing in-flight rows; ``serve_continuous`` runs the
+    full queue → admit → step loop against a ``schedule.Scheduler``.
 
     The verification strategy is shared across the batch (the tree topology
     must be uniform for vectorization); a planner, if supplied, observes the
@@ -391,11 +428,56 @@ class BatchedSSVEngine:
         self.pending: Optional[np.ndarray] = None
         self.committed_len: Optional[np.ndarray] = None  # host-side (R,)
         self.batch = 0
+        # pending per-row admission resets, consumed by the next step()
+        self._admit_mask: Optional[np.ndarray] = None
+        self._admit_len: Optional[np.ndarray] = None
+        self._admit_pending: Optional[np.ndarray] = None
 
     # -------------------------------------------------------------- setup
+    def _max_gamma(self) -> int:
+        """Largest draft-tree size any step of this engine can run: the base
+        strategy, plus — when a planner is attached — every strategy in its
+        profile (a mid-run refinement can switch to any of them)."""
+        g = self.serve.ssv.num_draft_tokens()
+        profile = getattr(self.planner, "profile", None)
+        if profile is not None:
+            for entries in profile.table.values():
+                for e in entries:
+                    g = max(g, e.strategy.num_draft_tokens())
+        return g
+
+    def _step_headroom(self) -> int:
+        return 2 * (self._max_gamma() + 2)
+
+    def _check_prompt(self, p: np.ndarray, what: str = "prompt"):
+        if len(p) == 0:
+            raise ValueError(f"{what} is empty — need at least 1 token")
+        # the generate loops stop a row once committed_len + headroom reaches
+        # max_context, but only AFTER its first step — a prompt admitted
+        # without that headroom would let the first commit write past the
+        # cache end (XLA clamps the slice -> silent KV corruption), so the
+        # bound must hold at admission time, over every strategy the planner
+        # could switch to.
+        headroom = self._step_headroom()
+        if len(p) - 1 + headroom > self.serve.max_context:
+            raise ValueError(
+                f"{what} has {len(p)} tokens, exceeding "
+                f"max_context={self.serve.max_context} minus the "
+                f"{headroom}-token speculative-step headroom; truncate the "
+                f"prompt or raise ServeConfig.max_context")
+
+    def _reset_admission(self, R: int):
+        self._admit_mask = np.zeros((R,), bool)
+        self._admit_len = np.zeros((R,), np.int32)
+        self._admit_pending = np.zeros((R,), np.int32)
+
     def start(self, prompts: Sequence[np.ndarray]):
         R = len(prompts)
-        assert R >= 1
+        if R < 1:
+            raise ValueError("prompt list is empty — nothing to serve")
+        prompts = [np.asarray(p) for p in prompts]
+        for i, p in enumerate(prompts):
+            self._check_prompt(p, what=f"prompt {i}")
         max_len = self.serve.max_context
         t_parts, d_parts = [], []
         for p in prompts:
@@ -416,21 +498,74 @@ class BatchedSSVEngine:
         self.pending = np.array([int(p[-1]) for p in prompts], np.int32)
         self.committed_len = np.array([len(p) - 1 for p in prompts], np.int64)
         self.batch = R
+        self._reset_admission(R)
         if self.planner is not None:
             self.planner.begin_request(
                 context_len=int(np.max([len(p) for p in prompts])))
+
+    def start_empty(self, num_slots: int):
+        """Allocate ``num_slots`` empty batch slots (zeroed caches, length 0).
+        Every request — including the first wave — then enters through
+        ``admit``, so admitted-mid-flight rows share one code path."""
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        max_len = self.serve.max_context
+        self.t_segs = model.init_caches(self.tcfg, num_slots, max_len)["segments"]
+        self.d_segs = model.init_caches(self.dcfg, num_slots, max_len)["segments"]
+        self.t_len = jnp.zeros((num_slots,), jnp.int32)
+        self.d_len = jnp.zeros((num_slots,), jnp.int32)
+        self.pending = np.zeros((num_slots,), np.int32)
+        self.committed_len = np.zeros((num_slots,), np.int64)
+        self.batch = num_slots
+        self._reset_admission(num_slots)
+
+    # -------------------------------------------------------------- admission
+    def admit(self, slot: int, prompt: np.ndarray):
+        """Mid-flight admission: re-prefill ``prompt`` and write its fresh KV
+        prefix into batch row ``slot`` (donated in-place row write — other
+        rows' cache bytes are untouched). The device-side length and pending
+        root of the row are reset by the NEXT fused step via the per-row
+        admission mask, so admission costs one prefill plus one row write,
+        and no extra device launch.
+
+        NOTE: the prefill jit retraces per prompt LENGTH — the first
+        admission at a previously-unseen length pays an XLA compile while
+        in-flight rows wait. Serving traffic with many distinct lengths
+        should bucket/pad prompts to a few lengths (ROADMAP: paged caches)."""
+        if not 0 <= slot < self.batch:
+            raise ValueError(f"slot {slot} out of range for batch {self.batch}")
+        prompt = np.asarray(prompt)
+        self._check_prompt(prompt)
+        max_len = self.serve.max_context
+        toks = jnp.asarray(prompt, jnp.int32)[None]
+        _, tc = jit_prefill(self.tcfg, max_len)(self.tp, toks[:, :-1])
+        _, dc = jit_prefill(self.dcfg, max_len)(self.dp, toks[:, :-1])
+        self.t_segs = admit_row_segments(self.t_segs, tc["segments"], slot)
+        self.d_segs = admit_row_segments(self.d_segs, dc["segments"], slot)
+        self._admit_mask[slot] = True
+        self._admit_len[slot] = len(prompt) - 1
+        self._admit_pending[slot] = int(prompt[-1])
+        self.pending[slot] = int(prompt[-1])
+        self.committed_len[slot] = len(prompt) - 1
 
     # -------------------------------------------------------------- one step
     def step(self, active: np.ndarray,
              strategy: Optional[SSVConfig] = None) -> Tuple[np.ndarray, np.ndarray]:
         """active: (R,) bool — rows to advance. Returns (tokens (R, pad+1),
-        n_accepted (R,)); inactive rows commit nothing (length frozen)."""
+        n_accepted (R,)); inactive rows commit nothing (length frozen). Rows
+        admitted since the last step have their device length / pending root
+        reset inside this same launch (per-row admission mask), so the launch
+        serves freshly-admitted and mid-generation rows together."""
         ssv = strategy or (self.planner.current() if self.planner else self.serve.ssv)
         greedy = self.serve.temperature == 0.0
         step_fn = jit_batched_step(self.tcfg, self.dcfg, ssv, greedy,
                                    self.serve.temperature)
         args = [self.tp, self.dp, self.t_segs, self.t_len, self.d_segs,
-                self.d_len, jnp.asarray(self.pending), jnp.asarray(active)]
+                self.d_len, jnp.asarray(self.pending), jnp.asarray(active),
+                jnp.asarray(self._admit_mask),
+                jnp.asarray(self._admit_len, jnp.int32),
+                jnp.asarray(self._admit_pending, jnp.int32)]
+        self._admit_mask = np.zeros_like(self._admit_mask)
         if not greedy:
             topo = build_topology(ssv.tree_depth, ssv.tree_width,
                                   ssv.traversal, ssv.tree_budget)
@@ -453,47 +588,149 @@ class BatchedSSVEngine:
     def generate_batch(self, prompts: Sequence[np.ndarray],
                        max_new_tokens: int = 0,
                        eos_id: int = -1) -> BatchGenerationResult:
-        max_new = max_new_tokens or self.serve.max_new_tokens
-        self.start([np.asarray(p) for p in prompts])
-        R = self.batch
-        outs: List[List[int]] = [[] for _ in range(R)]
-        step_logs: List[List[StepStats]] = [[] for _ in range(R)]
-        done = np.zeros((R,), bool)
-        t_start = time.time()
+        """Drain-mode batched generation: every prompt is admitted at t=0
+        into its own slot and the batch runs to completion. Sugar over
+        ``serve_continuous`` (one slot per prompt, no queue), so both entry
+        points share one stepping/harvest loop."""
+        if len(prompts) < 1:
+            raise ValueError("prompt list is empty — nothing to serve")
+        res = self.serve_continuous(
+            [np.asarray(p) for p in prompts], num_slots=len(prompts),
+            max_new_tokens=max_new_tokens, eos_id=eos_id)
+        return BatchGenerationResult(results=res.results, steps=res.steps,
+                                     wall_s=res.wall_s)
+
+    # -------------------------------------------------------------- continuous
+    def serve_continuous(self, requests: Sequence, num_slots: int,
+                         max_new_tokens: int = 0,
+                         eos_id: int = -1) -> "ContinuousServeResult":
+        """Continuous-batching serve loop: admit queued requests into freed
+        slots mid-flight instead of draining the batch between waves.
+
+        ``requests``: ``schedule.Request`` objects (arrival times on the
+        virtual fused-step clock) or raw prompt arrays (all arrive at t=0).
+        Per-row generation semantics are identical to single-stream
+        ``SSVEngine.generate`` — admission never perturbs in-flight rows
+        (tests/test_engine_continuous.py asserts token equality).
+        """
+        max_new_default = max_new_tokens or self.serve.max_new_tokens
+        reqs: List[schedule_lib.Request] = []
+        for i, r in enumerate(requests):
+            if isinstance(r, schedule_lib.Request):
+                reqs.append(r)
+            else:
+                reqs.append(schedule_lib.Request(req_id=i,
+                                                 prompt=np.asarray(r)))
+        if not reqs:
+            raise ValueError("request list is empty — nothing to serve")
+        if len({r.req_id for r in reqs}) != len(reqs):
+            raise ValueError("duplicate req_id in request list — outputs are "
+                             "keyed by req_id and must not merge")
+        for r in reqs:   # fail fast, before any slot state exists
+            self._check_prompt(np.asarray(r.prompt),
+                               what=f"request {r.req_id} prompt")
+        sched = schedule_lib.Scheduler(num_slots)
+        for r in reqs:
+            sched.submit(r)
+        self.start_empty(num_slots)
+        if self.planner is not None:
+            self.planner.begin_request(
+                context_len=int(max(len(r.prompt) for r in reqs)))
+
+        outs: Dict[int, List[int]] = {r.req_id: [] for r in reqs}
+        step_logs: Dict[int, List[StepStats]] = {r.req_id: [] for r in reqs}
+        occupancy: List[float] = []
+        # context stop bound sized for the LARGEST strategy the planner can
+        # switch to (a switch lands one step after this check runs)
+        stop_margin = self._step_headroom()
+        clock = 0.0
         n_steps = 0
-        while not done.all():
+        t_start = time.time()
+        budget = sum((r.max_new_tokens or max_new_default) for r in reqs)
+        safety = 4 * budget + 16 * len(reqs) + 16
+        while not sched.idle():
+            for slot, req in sched.admit(clock):
+                self.admit(slot, req.prompt)
+                sched.mark_decoding(slot)
+            active = sched.decoding_mask()
+            if not active.any():
+                # arrival gap: jump the virtual clock to the next arrival
+                nxt = sched.next_arrival()
+                clock = max(clock + 1.0,
+                            float(nxt) if nxt is not None else clock + 1.0)
+                continue
+            occupancy.append(float(active.sum()) / num_slots)
             ssv = (self.planner.current() if self.planner else self.serve.ssv)
             gamma = build_topology(ssv.tree_depth, ssv.tree_width,
                                    ssv.traversal, ssv.tree_budget).num_nodes - 1
             t0 = time.perf_counter()
-            toks, n_acc = self.step(active=~done)
+            toks, n_acc = self.step(active=active)
             dt = time.perf_counter() - t0
             accepted_active = []
-            for r in range(R):
-                if done[r]:
-                    continue
-                n = int(n_acc[r])
+            for slot in np.nonzero(active)[0]:
+                slot = int(slot)
+                req = sched.request_at(slot)
+                out = outs[req.req_id]
+                limit = req.max_new_tokens or max_new_default
+                n = int(n_acc[slot])
                 accepted_active.append(n)
-                step_logs[r].append(StepStats(
+                step_logs[req.req_id].append(StepStats(
                     accepted=n, emitted=n + 1, latency_s=dt, gamma=gamma,
                     strategy=ssv, host_elems=toks.shape[1] + 1))
-                for t in toks[r, : n + 1]:
-                    outs[r].append(int(t))
-                    if int(t) == eos_id or len(outs[r]) >= max_new:
-                        done[r] = True
+                finished = False
+                for t in toks[slot, : n + 1]:
+                    out.append(int(t))
+                    if int(t) == eos_id or len(out) >= limit:
+                        finished = True
                         break
-                if self.committed_len[r] + 2 * (gamma + 2) >= self.serve.max_context:
-                    done[r] = True
+                if self.committed_len[slot] + stop_margin >= self.serve.max_context:
+                    finished = True
+                if finished:
+                    sched.finish(slot, now=clock + 1.0)
+                    sched.release(slot)
             if self.planner is not None and accepted_active:
                 self.planner.observe(accepted=float(np.mean(accepted_active)),
                                      latency_s=dt)
+            clock += 1.0
             n_steps += 1
-            if n_steps > 4 * max_new + 16:   # safety: shapes guarantee progress
+            if n_steps > safety:   # shapes guarantee progress; belt-and-braces
                 break
         wall = time.time() - t_start
-        results = [GenerationResult(tokens=np.asarray(outs[r]),
-                                    steps=step_logs[r]) for r in range(R)]
-        return BatchGenerationResult(results=results, steps=n_steps, wall_s=wall)
+        results = [GenerationResult(tokens=np.asarray(outs[r.req_id]),
+                                    steps=step_logs[r.req_id]) for r in reqs]
+        return ContinuousServeResult(results=results, requests=reqs,
+                                     steps=n_steps, wall_s=wall,
+                                     occupancy=occupancy)
+
+
+@dataclasses.dataclass
+class ContinuousServeResult:
+    """Outputs + serving statistics of a continuous-batching run. ``results``
+    aligns with the submitted request order; queue-delay / occupancy are in
+    virtual fused-step units (deterministic, wall-clock-free)."""
+    results: List[GenerationResult]
+    requests: List["schedule_lib.Request"]
+    steps: int
+    wall_s: float
+    occupancy: List[float]       # per-fused-step busy-slot fraction
+
+    @property
+    def total_tokens(self) -> int:
+        return int(sum(len(r.tokens) for r in self.results))
+
+    @property
+    def aggregate_throughput(self) -> float:
+        return self.total_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return float(np.mean(self.occupancy)) if self.occupancy else 0.0
+
+    @property
+    def mean_queue_delay_steps(self) -> float:
+        delays = [r.queue_delay for r in self.requests
+                  if r.queue_delay is not None]
+        return float(np.mean(delays)) if delays else 0.0
 
 
 # ------------------------------------------------------------ baselines

@@ -1,18 +1,181 @@
-"""Refresh/reuse schedule calibration — training-free IndexCache-style greedy
-search (paper §5.2, Table 1 footnote).
+"""Scheduling: continuous-batching request admission + refresh/reuse
+schedule calibration.
 
-Given a target model and a calibration batch, greedily grow the set of REUSE
-layers: at each round, tentatively add each remaining candidate layer and
-measure the output-logit KL divergence against the all-refresh baseline on a
-verification workload; keep the candidate with the smallest KL as long as it
-stays under ``kl_budget``. Layer 0 is never a candidate (mandatory refresh).
+Part 1 — continuous batching (serving side). `RequestQueue` is a FIFO of
+`Request`s with arrival times measured on the serving loop's virtual clock
+(fused-step index); `Scheduler` owns a fixed set of engine batch slots and
+tracks each through free → prefilling → decoding → finished → free. The
+engine asks the scheduler which arrived requests fit into freed slots
+(`admit`), marks them decoding once their per-slot re-prefill has landed in
+the batch cache, and hands slots back on completion (`finish`/`release`).
+The scheduler never touches device state — it is pure bookkeeping, so its
+invariants (no double assignment, FIFO fairness, freed-slot reuse, queue
+drains) are testable without a model (tests/test_schedule_admission.py).
+
+Part 2 — refresh/reuse schedule calibration: training-free IndexCache-style
+greedy search (paper §5.2, Table 1 footnote). Given a target model and a
+calibration batch, greedily grow the set of REUSE layers: at each round,
+tentatively add each remaining candidate layer and measure the output-logit
+KL divergence against the all-refresh baseline on a verification workload;
+keep the candidate with the smallest KL as long as it stays under
+``kl_budget``. Layer 0 is never a candidate (mandatory refresh).
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+# ------------------------------------------------------ continuous batching
+class SlotState(enum.Enum):
+    FREE = "free"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued generation request. ``arrival`` / ``admitted_at`` /
+    ``finished_at`` are virtual-clock times (fused-step indices), so queue
+    delays are deterministic and testable without wall-clock noise."""
+    req_id: int
+    prompt: np.ndarray
+    max_new_tokens: int = 0          # 0 = serve config default
+    arrival: float = 0.0
+    admitted_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def queue_delay(self) -> Optional[float]:
+        if self.admitted_at is None:
+            return None
+        return self.admitted_at - self.arrival
+
+
+class RequestQueue:
+    """FIFO over arrived requests: pop order is (arrival, submission order) —
+    submission order is the list order, kept stable by pop_arrived's strict
+    ``<`` comparison."""
+
+    def __init__(self):
+        self._items: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self._items.append(req)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def pop_arrived(self, now: float) -> Optional[Request]:
+        """Earliest-arrival request with arrival <= now (stable on ties)."""
+        best_i = None
+        for i, r in enumerate(self._items):
+            if r.arrival <= now and (best_i is None
+                                     or r.arrival < self._items[best_i].arrival):
+                best_i = i
+        return self._items.pop(best_i) if best_i is not None else None
+
+    def next_arrival(self) -> Optional[float]:
+        return min((r.arrival for r in self._items), default=None)
+
+
+class Scheduler:
+    """Slot bookkeeping for mid-flight admission into a fixed batch.
+
+    Lifecycle per slot: FREE --admit--> PREFILLING --mark_decoding-->
+    DECODING --finish--> FINISHED --release--> FREE. Transition methods
+    raise on invalid moves so engine bugs surface as errors, not silent
+    double-assignments.
+    """
+
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.num_slots = num_slots
+        self.queue = RequestQueue()
+        self.states: List[SlotState] = [SlotState.FREE] * num_slots
+        self.slot_req: List[Optional[Request]] = [None] * num_slots
+        self.completed: List[Request] = []
+
+    # ------------------------------------------------------------ queue side
+    def submit(self, req: Request) -> None:
+        self.queue.submit(req)
+
+    # ------------------------------------------------------------ admission
+    def admit(self, now: float) -> List[Tuple[int, Request]]:
+        """Assign arrived queued requests to FREE slots (FIFO), marking each
+        slot PREFILLING. Returns the (slot, request) assignments made."""
+        placed: List[Tuple[int, Request]] = []
+        for slot in range(self.num_slots):
+            if self.states[slot] is not SlotState.FREE:
+                continue
+            req = self.queue.pop_arrived(now)
+            if req is None:
+                break
+            if self.slot_req[slot] is not None:
+                raise RuntimeError(f"slot {slot} is FREE but still holds "
+                                   f"request {self.slot_req[slot].req_id}")
+            req.admitted_at = now
+            self.states[slot] = SlotState.PREFILLING
+            self.slot_req[slot] = req
+            placed.append((slot, req))
+        return placed
+
+    def mark_decoding(self, slot: int) -> None:
+        if self.states[slot] is not SlotState.PREFILLING:
+            raise RuntimeError(f"slot {slot} is {self.states[slot].value}, "
+                               "expected prefilling")
+        self.states[slot] = SlotState.DECODING
+
+    def finish(self, slot: int, now: float) -> Request:
+        if self.states[slot] is not SlotState.DECODING:
+            raise RuntimeError(f"slot {slot} is {self.states[slot].value}, "
+                               "expected decoding")
+        req = self.slot_req[slot]
+        req.finished_at = now
+        self.states[slot] = SlotState.FINISHED
+        self.completed.append(req)
+        return req
+
+    def release(self, slot: int) -> None:
+        if self.states[slot] is not SlotState.FINISHED:
+            raise RuntimeError(f"slot {slot} is {self.states[slot].value}, "
+                               "expected finished")
+        self.states[slot] = SlotState.FREE
+        self.slot_req[slot] = None
+
+    # ------------------------------------------------------------ queries
+    def request_at(self, slot: int) -> Optional[Request]:
+        return self.slot_req[slot]
+
+    def decoding_mask(self) -> np.ndarray:
+        return np.array([s is SlotState.DECODING for s in self.states], bool)
+
+    def occupancy(self) -> float:
+        busy = sum(s is not SlotState.FREE for s in self.states)
+        return busy / self.num_slots
+
+    def next_arrival(self) -> Optional[float]:
+        return self.queue.next_arrival()
+
+    def idle(self) -> bool:
+        return len(self.queue) == 0 and all(
+            s is SlotState.FREE for s in self.states)
+
+
+def poisson_arrivals(n: int, rate_per_step: float,
+                     seed: int = 0) -> np.ndarray:
+    """Deterministic Poisson-process arrival replay: n arrival times on the
+    virtual step clock with exponential inter-arrival gaps of mean
+    1/rate_per_step. rate <= 0 means everything arrives at t=0."""
+    if rate_per_step <= 0:
+        return np.zeros((n,), np.float64)
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_per_step, size=n))
 
 
 def kl_divergence(p_logits: np.ndarray, q_logits: np.ndarray) -> float:

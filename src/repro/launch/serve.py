@@ -20,6 +20,7 @@ from repro.config import ServeConfig, SSVConfig
 from repro.core import draft as draft_lib
 from repro.core import engine as engine_lib
 from repro.core import planner as planner_lib
+from repro.core import schedule as schedule_lib
 from repro.data.synthetic import SyntheticConfig, SyntheticCorpus
 from repro.models import model
 
@@ -33,6 +34,14 @@ def main():
     ap.add_argument("--batch", type=int, default=1,
                     help=">1 serves all prompts through the vectorized "
                          "BatchedSSVEngine in one fused step per iteration")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over --batch slots: admit "
+                         "prompts into freed slots mid-flight (Poisson "
+                         "arrival replay via --arrival-rate) instead of "
+                         "serving drain-then-refill groups")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="continuous-mode Poisson arrivals per fused step "
+                         "(<=0: all requests arrive at t=0)")
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--precision-class", default="Strict",
@@ -65,6 +74,27 @@ def main():
 
     corpus = SyntheticCorpus(SyntheticConfig(vocab_size=cfg.vocab_size))
     prompts = [corpus.batch(i, 1, args.prompt_len)[0] for i in range(args.prompts)]
+
+    if args.continuous:     # any batch size: --batch is the slot count
+        eng = engine_lib.BatchedSSVEngine(tp, cfg, dp, dcfg, serve_cfg)
+        arrivals = schedule_lib.poisson_arrivals(
+            len(prompts), args.arrival_rate, seed=args.seed)
+        reqs = [schedule_lib.Request(req_id=i, prompt=p,
+                                     arrival=float(arrivals[i]))
+                for i, p in enumerate(prompts)]
+        res = eng.serve_continuous(reqs, num_slots=args.batch,
+                                   max_new_tokens=args.tokens)
+        for req, gen in zip(res.requests, res.results):
+            delay = (f"{req.queue_delay:.1f}" if req.queue_delay is not None
+                     else "n/a (never admitted)")
+            print(f"prompt {req.req_id}: {len(gen.tokens)} tokens, "
+                  f"arrival {req.arrival:.1f}, queue delay {delay} steps")
+        print(f"continuous over {args.batch} slots: {res.total_tokens} tokens "
+              f"in {res.wall_s:.2f}s ({res.aggregate_throughput:.1f} tok/s "
+              f"aggregate, {res.steps} fused steps, "
+              f"occupancy {res.mean_occupancy:.2f}, "
+              f"queue delay {res.mean_queue_delay_steps:.1f} steps)")
+        return
 
     if args.batch > 1:
         eng = engine_lib.BatchedSSVEngine(tp, cfg, dp, dcfg, serve_cfg)

@@ -2,6 +2,8 @@
 run to completion under --quick (CPU-sized shapes). A suite that breaks
 against the current engine/model APIs fails tier-1 here instead of rotting
 silently until the next full benchmark run."""
+import json
+import os
 import sys
 
 import numpy as np
@@ -9,11 +11,33 @@ import pytest
 
 from benchmarks import run as bench_run
 
+E2E_QUICK_JSON = "/tmp/BENCH_e2e.quick.json"
+
 
 @pytest.mark.parametrize("name,modname", bench_run.SUITES,
                          ids=[n for n, _ in bench_run.SUITES])
 def test_suite_quick(name, modname):
     bench_run.run_suite(modname, quick=True)
+
+
+def test_e2e_quick_emits_continuous_serving_row():
+    """The continuous-vs-drain serving benchmark must run under --quick and
+    emit occupancy / queue-delay stats in the JSON report. Regenerates the
+    report itself (never trusts a file another process / older checkout may
+    have left at the fixed /tmp path)."""
+    bench_run.run_suite("benchmarks.e2e_spec", quick=True)
+    with open(E2E_QUICK_JSON) as f:
+        report = json.load(f)
+    cont = report["continuous"]
+    for key in ("drain_tok_s", "continuous_tok_s", "speedup_vs_drain",
+                "mean_occupancy", "mean_queue_delay_steps",
+                "continuous_fused_steps", "drain_fused_steps"):
+        assert key in cont, f"continuous serving row missing {key!r}"
+    assert 0.0 < cont["mean_occupancy"] <= 1.0
+    assert cont["mean_queue_delay_steps"] >= 0.0
+    assert cont["continuous_tok_s"] > 0.0 and cont["drain_tok_s"] > 0.0
+    # mid-flight admission never does MORE fused steps than drain-then-refill
+    assert cont["continuous_fused_steps"] <= cont["drain_fused_steps"]
 
 
 def test_runner_cli_quick_only_refinement(capsys):

@@ -140,6 +140,42 @@ def test_commit_zero_is_noop_for_recurrent_state():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
 
+def test_start_rejects_empty_prompt_list(nsa_pair):
+    """Regression: an empty batch used to die on a bare assert (or worse,
+    propagate into a zero-row stack); it must be a clear ValueError."""
+    tp, tcfg, dp, dcfg = nsa_pair
+    beng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg,
+                                       _serve(SSVConfig(tree_depth=2,
+                                                        tree_width=2), 4))
+    with pytest.raises(ValueError, match="empty"):
+        beng.start([])
+    with pytest.raises(ValueError, match="empty"):
+        beng.generate_batch([])
+
+
+def test_start_rejects_prompt_over_max_context(nsa_pair):
+    """Regression: a prompt longer than max_context used to fail deep inside
+    prefill with a shape assert; it must be a clear ValueError naming the
+    limit."""
+    tp, tcfg, dp, dcfg = nsa_pair
+    ssv = SSVConfig(tree_depth=2, tree_width=2)
+    serve = _serve(ssv, 4)                                     # max_context=256
+    beng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, serve)
+    ok = np.arange(20) % 128
+    with pytest.raises(ValueError, match="max_context"):
+        beng.start([ok, np.arange(serve.max_context + 1) % 128])
+    with pytest.raises(ValueError, match="empty"):
+        beng.start([ok, np.array([], np.int64)])
+    # boundary: a prompt that fits the cache but leaves no room for even one
+    # speculative step would let the first commit write past the cache end —
+    # it must be rejected at admission, not corrupt KV silently
+    with pytest.raises(ValueError, match="headroom"):
+        beng.start([np.arange(serve.max_context) % 128])
+    # ... while a prompt that leaves exactly one step of headroom is fine
+    limit = serve.max_context + 1 - 2 * (ssv.num_draft_tokens() + 2)
+    beng.start([np.arange(limit) % 128])
+
+
 def test_batched_stochastic_runs(nsa_pair):
     tp, tcfg, dp, dcfg = nsa_pair
     ssv = SSVConfig(tree_depth=2, tree_width=2)

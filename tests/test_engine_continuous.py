@@ -1,0 +1,172 @@
+"""Continuous-batching invariant harness: mid-flight slot admission must
+never perturb in-flight rows.
+
+The core invariant is token equality — every request served under
+continuous batching (random arrival orders, slot counts 1-4, rows admitted
+into freed slots mid-generation) produces byte-identical tokens to the same
+prompt run through single-stream ``SSVEngine.generate``. A seeded small case
+runs in tier-1; the long randomized stress run is opt-in via ``--runslow``
+(tests/conftest.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, NSAConfig, ServeConfig, SSVConfig
+from repro.core import draft as draft_lib
+from repro.core import engine as engine_lib
+from repro.core import schedule as schedule_lib
+from repro.models import model
+
+NSA = NSAConfig(cmp_block=8, cmp_stride=4, sel_block=16, n_selected=4, window=32)
+MAX_NEW = 8
+SSV = SSVConfig(tree_depth=2, tree_width=2)
+
+PROMPTS = [np.arange(18) % 64, (np.arange(23) * 3) % 64,
+           (np.arange(15) * 7) % 64, (np.arange(20) * 5) % 64,
+           (np.arange(17) * 11) % 64, (np.arange(21) * 13) % 64]
+
+
+def _serve(n=MAX_NEW, temperature=0.0, max_context=256):
+    return ServeConfig(max_new_tokens=n, temperature=temperature,
+                       max_context=max_context, ssv=SSV, use_planner=False)
+
+
+@pytest.fixture(scope="module")
+def ct_pair():
+    tcfg = ModelConfig(name="ctgt", num_layers=2, d_model=64, num_heads=4,
+                       num_kv_heads=2, d_ff=128, vocab_size=64,
+                       max_seq_len=512, dtype="float32", attention="nsa",
+                       nsa=NSA)
+    dcfg = draft_lib.draft_config(tcfg, num_layers=1)
+    tp = model.init(jax.random.PRNGKey(0), tcfg)
+    dp = model.init(jax.random.PRNGKey(1), dcfg)
+    return tp, tcfg, dp, dcfg
+
+
+@pytest.fixture(scope="module")
+def single_stream_reference(ct_pair):
+    """Greedy single-stream output per prompt — the ground truth every
+    continuous-batching configuration must reproduce exactly."""
+    tp, tcfg, dp, dcfg = ct_pair
+    ref = []
+    for p in PROMPTS:
+        eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, _serve())
+        ref.append(eng.generate(p, max_new_tokens=MAX_NEW).tokens)
+    return ref
+
+
+def _random_requests(seed, prompts=PROMPTS, max_arrival=6):
+    """Random arrival order + times, deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(prompts))
+    return [schedule_lib.Request(
+                req_id=int(i), prompt=prompts[int(i)],
+                arrival=float(rng.integers(0, max_arrival)))
+            for i in order]
+
+
+@pytest.mark.parametrize("slots", [1, 2, 3, 4])
+def test_continuous_token_equality(ct_pair, single_stream_reference, slots):
+    """Byte-identical tokens for every request, at every slot count, with
+    arrival order decoupled from submission order."""
+    tp, tcfg, dp, dcfg = ct_pair
+    reqs = _random_requests(seed=slots)
+    eng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve())
+    res = eng.serve_continuous(reqs, num_slots=slots, max_new_tokens=MAX_NEW)
+    assert len(res.results) == len(PROMPTS)
+    for req, gen in zip(res.requests, res.results):
+        np.testing.assert_array_equal(
+            single_stream_reference[req.req_id], gen.tokens,
+            err_msg=f"request {req.req_id} diverged from single-stream "
+                    f"(slots={slots}, admitted_at={req.admitted_at})")
+    # the run really exercised MID-FLIGHT admission: with fewer slots than
+    # requests, someone must have been admitted after the clock started
+    if slots < len(PROMPTS):
+        assert max(r.admitted_at for r in res.requests) > 0.0
+    # everything was served and accounted
+    assert all(r.finished_at is not None for r in res.requests)
+    assert 0.0 < res.mean_occupancy <= 1.0
+    assert res.steps == len(res.occupancy)
+
+
+def test_admission_leaves_inflight_rows_untouched(ct_pair):
+    """Direct cache-level check: admitting into slot 1 must not change a
+    single byte of slot 0's KV rows, device length, or host mirrors."""
+    tp, tcfg, dp, dcfg = ct_pair
+    eng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve())
+    eng.start_empty(2)
+    eng.admit(0, PROMPTS[0])
+    eng.step(active=np.array([True, False]))
+    eng.step(active=np.array([True, False]))
+    row0_before = [np.asarray(a[:, 0]).copy()
+                   for a in jax.tree.leaves(eng.t_segs)]
+    len_before = int(eng.committed_len[0])
+    pending_before = int(eng.pending[0])
+    eng.admit(1, PROMPTS[1])                  # mid-flight admission
+    row0_after = [np.asarray(a[:, 0]) for a in jax.tree.leaves(eng.t_segs)]
+    for b, a in zip(row0_before, row0_after):
+        np.testing.assert_array_equal(b, a)
+    assert int(eng.committed_len[0]) == len_before
+    assert int(eng.pending[0]) == pending_before
+    # and the next step advances both rows: the freshly-admitted one from its
+    # reset length, the in-flight one from where it left off
+    eng.step(active=np.array([True, True]))
+    assert int(eng.committed_len[0]) > len_before
+    assert int(eng.committed_len[1]) > len(PROMPTS[1]) - 1
+    np.testing.assert_array_equal(np.asarray(eng.t_len), eng.committed_len)
+
+
+def test_serve_continuous_rejects_bad_requests(ct_pair):
+    tp, tcfg, dp, dcfg = ct_pair
+    eng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve())
+    with pytest.raises(ValueError, match="empty"):
+        eng.serve_continuous([], num_slots=2)
+    with pytest.raises(ValueError, match="max_context"):
+        eng.serve_continuous([np.arange(300) % 64], num_slots=2)
+    with pytest.raises(ValueError):
+        eng.serve_continuous([PROMPTS[0]], num_slots=0)
+    with pytest.raises(ValueError, match="req_id"):
+        eng.serve_continuous(
+            [schedule_lib.Request(req_id=0, prompt=PROMPTS[0]),
+             schedule_lib.Request(req_id=0, prompt=PROMPTS[1])], num_slots=2)
+
+
+def test_admit_validates_slot_and_prompt(ct_pair):
+    tp, tcfg, dp, dcfg = ct_pair
+    eng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve())
+    eng.start_empty(2)
+    with pytest.raises(ValueError, match="slot"):
+        eng.admit(2, PROMPTS[0])
+    with pytest.raises(ValueError, match="empty"):
+        eng.admit(0, np.array([], np.int64))
+    with pytest.raises(ValueError, match="max_context"):
+        eng.admit(0, np.arange(257) % 64)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [11, 29])
+def test_continuous_stress_many_arrivals(ct_pair, seed):
+    """Long-horizon randomized admission stress: more requests than slots,
+    spread-out arrivals, mixed per-request budgets — every request still
+    token-equal to single-stream generation."""
+    tp, tcfg, dp, dcfg = ct_pair
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 64, size=int(rng.integers(12, 28)))
+               for _ in range(10)]
+    budgets = [int(rng.integers(4, 14)) for _ in prompts]
+    ref = []
+    for p, b in zip(prompts, budgets):
+        eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, _serve(n=b))
+        ref.append(eng.generate(p, max_new_tokens=b).tokens)
+    order = rng.permutation(len(prompts))
+    reqs = [schedule_lib.Request(req_id=int(i), prompt=prompts[int(i)],
+                                 max_new_tokens=budgets[int(i)],
+                                 arrival=float(rng.integers(0, 20)))
+            for i in order]
+    eng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve())
+    res = eng.serve_continuous(reqs, num_slots=3)
+    for req, gen in zip(res.requests, res.results):
+        np.testing.assert_array_equal(ref[req.req_id], gen.tokens)
+    assert max(r.admitted_at for r in res.requests) > 0.0

@@ -1,0 +1,190 @@
+"""Property-style tests for the continuous-batching scheduler
+(repro.core.schedule.Scheduler): no slot double-assignment, FIFO fairness
+under equal arrivals, freed-slot reuse, and queue drainage.
+
+Hypothesis-optional shim (PR 2 pattern): when hypothesis is installed the
+properties run under ``@given`` with full shrinking; on container images
+without it they fall back to a seeded sweep (pytest parametrize over seeds)
+instead of skipping, so the invariants stay in tier-1 either way.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:   # container images without hypothesis: seeded fallback
+    HAVE_HYPOTHESIS = False
+
+from repro.core import schedule as S
+
+
+def seeded_property(n_examples=30, seed_max=10_000):
+    """@given(seed=...) under hypothesis; a seeded parametrized sweep
+    without it. The test body must derive all randomness from ``seed``."""
+    if HAVE_HYPOTHESIS:
+        def deco(fn):
+            return settings(max_examples=n_examples, deadline=None)(
+                given(seed=st.integers(0, seed_max))(fn))
+        return deco
+
+    def deco(fn):
+        return pytest.mark.parametrize("seed", range(n_examples))(fn)
+    return deco
+
+
+def _mk_requests(rng, n, max_arrival=6):
+    return [S.Request(req_id=i, prompt=np.arange(3 + i),
+                      arrival=float(rng.integers(0, max_arrival)))
+            for i in range(n)]
+
+
+def _drive(sched, rng, max_rounds=500):
+    """Random-but-seeded serving simulation: each round admits arrived
+    requests, then finishes a random subset of decoding slots. Returns the
+    per-round admission log [(round, slot, req_id)]."""
+    log = []
+    for rnd in range(max_rounds):
+        if sched.idle():
+            break
+        for slot, req in sched.admit(float(rnd)):
+            assert sched.states[slot] is S.SlotState.PREFILLING
+            log.append((rnd, slot, req.req_id))
+            sched.mark_decoding(slot)
+        decoding = np.nonzero(sched.decoding_mask())[0]
+        for slot in decoding:
+            if rng.random() < 0.5:
+                sched.finish(int(slot), float(rnd) + 1.0)
+                sched.release(int(slot))
+    return log
+
+
+@seeded_property()
+def test_no_slot_double_assignment(seed):
+    """A slot is never assigned while occupied, and a request is admitted
+    exactly once."""
+    rng = np.random.default_rng(seed)
+    n_slots = int(rng.integers(1, 5))
+    sched = S.Scheduler(n_slots)
+    reqs = _mk_requests(rng, int(rng.integers(1, 12)))
+    for r in reqs:
+        sched.submit(r)
+    occupied = {}
+    admitted = []
+    for rnd in range(400):
+        if sched.idle():
+            break
+        for slot, req in sched.admit(float(rnd)):
+            assert slot not in occupied, \
+                f"slot {slot} double-assigned while holding {occupied[slot]}"
+            occupied[slot] = req.req_id
+            admitted.append(req.req_id)
+            sched.mark_decoding(slot)
+        for slot in np.nonzero(sched.decoding_mask())[0]:
+            if rng.random() < 0.4:
+                sched.finish(int(slot), float(rnd) + 1.0)
+                sched.release(int(slot))
+                del occupied[int(slot)]
+    assert sorted(admitted) == sorted(r.req_id for r in reqs)
+    assert len(admitted) == len(set(admitted))
+
+
+@seeded_property()
+def test_fifo_fairness_under_equal_arrivals(seed):
+    """With identical arrival times, requests are admitted in submission
+    order (no overtaking)."""
+    rng = np.random.default_rng(seed)
+    n_slots = int(rng.integers(1, 4))
+    sched = S.Scheduler(n_slots)
+    n = int(rng.integers(2, 10))
+    for i in range(n):
+        sched.submit(S.Request(req_id=i, prompt=np.arange(4), arrival=0.0))
+    log = _drive(sched, rng)
+    order = [req_id for _, _, req_id in log]
+    assert order == sorted(order), f"FIFO violated: admission order {order}"
+
+
+@seeded_property()
+def test_earlier_arrivals_never_overtaken(seed):
+    """General arrivals: when request ``a`` is admitted, no strictly
+    earlier-arrived request can still be waiting in the queue and only get a
+    slot in a later round (earliest-arrival pop)."""
+    rng = np.random.default_rng(seed)
+    sched = S.Scheduler(int(rng.integers(1, 4)))
+    reqs = _mk_requests(rng, int(rng.integers(2, 10)))
+    by_id = {r.req_id: r for r in reqs}
+    for r in reqs:
+        sched.submit(r)
+    log = _drive(sched, rng)
+    admitted_at = {req_id: rnd for rnd, _, req_id in log}
+    for a in reqs:
+        for b in reqs:
+            if a.req_id == b.req_id:
+                continue
+            # b arrived strictly earlier and was already in the arrived queue
+            # when a was admitted -> b must not be admitted strictly later
+            if (b.arrival < a.arrival
+                    and b.arrival <= admitted_at[a.req_id]):
+                assert admitted_at[b.req_id] <= admitted_at[a.req_id], (
+                    f"req {b.req_id} (arrival {b.arrival}) overtaken by "
+                    f"req {a.req_id} (arrival {a.arrival})")
+
+
+@seeded_property()
+def test_freed_slot_reuse_and_drain(seed):
+    """More requests than slots: freed slots are reused, every request is
+    eventually served, and the scheduler drains to idle."""
+    rng = np.random.default_rng(seed)
+    n_slots = int(rng.integers(1, 3))
+    sched = S.Scheduler(n_slots)
+    reqs = _mk_requests(rng, n_slots + int(rng.integers(1, 8)))
+    for r in reqs:
+        sched.submit(r)
+    log = _drive(sched, rng)
+    assert sched.idle()
+    assert len(sched.queue) == 0
+    assert len(sched.completed) == len(reqs)
+    for r in reqs:
+        assert r.admitted_at is not None and r.finished_at is not None
+        assert r.queue_delay >= 0.0
+    # reuse: with fewer slots than requests, some slot served >= 2 requests
+    slots_used = [slot for _, slot, _ in log]
+    assert max(np.bincount(slots_used)) >= 2
+    assert all(0 <= s < n_slots for s in slots_used)
+
+
+def test_invalid_transitions_raise():
+    sched = S.Scheduler(2)
+    sched.submit(S.Request(req_id=0, prompt=np.arange(4)))
+    [(slot, _)] = sched.admit(0.0)
+    with pytest.raises(RuntimeError):        # finish before decoding
+        sched.finish(slot, 1.0)
+    sched.mark_decoding(slot)
+    with pytest.raises(RuntimeError):        # double mark_decoding
+        sched.mark_decoding(slot)
+    with pytest.raises(RuntimeError):        # release before finish
+        sched.release(slot)
+    sched.finish(slot, 1.0)
+    sched.release(slot)
+    assert sched.idle()
+    with pytest.raises(ValueError):
+        S.Scheduler(0)
+
+
+def test_arrivals_gate_admission():
+    """A request is invisible to admission until its arrival time."""
+    sched = S.Scheduler(2)
+    sched.submit(S.Request(req_id=0, prompt=np.arange(4), arrival=3.0))
+    assert sched.admit(0.0) == []
+    assert sched.next_arrival() == 3.0
+    placed = sched.admit(3.0)
+    assert [r.req_id for _, r in placed] == [0]
+    assert placed[0][1].queue_delay == 0.0
+
+
+def test_poisson_arrivals_deterministic():
+    a = S.poisson_arrivals(6, 0.5, seed=7)
+    b = S.poisson_arrivals(6, 0.5, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert (np.diff(a) > 0).all()
+    np.testing.assert_array_equal(S.poisson_arrivals(4, 0.0), np.zeros(4))
