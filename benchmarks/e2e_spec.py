@@ -116,15 +116,18 @@ def main(csv=None, grid=((2, 2), (3, 2), (4, 2), (3, 4)), tokens=48,
     beng.generate_batch(prompts, max_new_tokens=tokens)   # warm the jit
     bres = beng.generate_batch(prompts, max_new_tokens=tokens)
     bat_tps = bres.aggregate_throughput
+    bat_kv = beng.kv_cache_bytes()
     csv.row(f"serve_sequential_x{batch}", 1e6 / max(seq_tps, 1e-9),
             f"{seq_tps:.1f}tok/s_aggregate")
     csv.row(f"serve_batched_x{batch}", 1e6 / max(bat_tps, 1e-9),
             f"{bat_tps:.1f}tok/s_aggregate;"
-            f"speedup_vs_sequential={bat_tps / max(seq_tps, 1e-9):.2f}x")
+            f"speedup_vs_sequential={bat_tps / max(seq_tps, 1e-9):.2f}x;"
+            f"peak_kv_bytes={bat_kv}")
     report["serving"] = {"batch": batch,
                          "sequential_tok_s": seq_tps,
                          "batched_tok_s": bat_tps,
-                         "batched_speedup": bat_tps / max(seq_tps, 1e-9)}
+                         "batched_speedup": bat_tps / max(seq_tps, 1e-9),
+                         "peak_kv_bytes": bat_kv}
 
     # ---- continuous batching vs drain-then-refill
     # A realistic serving mix: 2*batch queued requests, each drain wave
@@ -173,14 +176,89 @@ def main(csv=None, grid=((2, 2), (3, 2), (4, 2), (3, 4)), tokens=48,
     csv.row(f"serve_continuous_x{batch}", 1e6 / max(cont_tps, 1e-9),
             f"{cont_tps:.1f}tok/s_aggregate;fused_steps={cres.steps};"
             f"occupancy={cres.mean_occupancy:.2f};"
-            f"speedup_vs_drain={cont_tps / max(drain_tps, 1e-9):.2f}x")
+            f"speedup_vs_drain={cont_tps / max(drain_tps, 1e-9):.2f}x;"
+            f"peak_kv_bytes={cres.kv_bytes}")
     report["continuous"] = {
         "batch": batch, "requests": n_req,
         "drain_tok_s": drain_tps, "continuous_tok_s": cont_tps,
         "speedup_vs_drain": cont_tps / max(drain_tps, 1e-9),
         "drain_fused_steps": d_steps, "continuous_fused_steps": cres.steps,
         "mean_occupancy": cres.mean_occupancy,
-        "mean_queue_delay_steps": cres.mean_queue_delay_steps}
+        "mean_queue_delay_steps": cres.mean_queue_delay_steps,
+        "peak_kv_bytes": cres.kv_bytes}
+
+    # ---- paged vs dense KV store (low-occupancy continuous workload)
+    # Mixed-length, mixed-budget requests over max_context-sized slots: the
+    # dense layout allocates slots x max_context x layers KV rows no matter
+    # what's live; the paged store provisions only each request's page
+    # reservation (prompt + budget + speculative headroom), so at low
+    # occupancy its peak KV bytes drop with the workload. Token equality
+    # between the backends is asserted here on top of the dedicated tests.
+    kv_prompts = [common.prompts(1, 64 + 32 * (i % 3), start=400 + i)[0]
+                  for i in range(n_req)]
+    kv_budgets = [max(4, tokens // (1 + i % 3)) for i in range(n_req)]
+
+    def _kv_reqs():
+        return [schedule_lib.Request(req_id=i, prompt=kv_prompts[i],
+                                     max_new_tokens=kv_budgets[i], arrival=0.0)
+                for i in range(n_req)]
+
+    def _kv_serve(backend, num_pages=0):
+        return ServeConfig(max_new_tokens=tokens, temperature=0.0,
+                           max_context=1024, ssv=ssv0, use_planner=False,
+                           kv_backend=backend, kv_num_pages=num_pages)
+
+    sizer = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _kv_serve("paged"))
+    needs = sorted(sizer.pages_for(len(p), b)
+                   for p, b in zip(kv_prompts, kv_budgets))
+    pool_pages = sum(needs[-batch:])          # full slot concurrency, no waits
+
+    def _kv_run(backend):
+        eng = engine_lib.BatchedSSVEngine(
+            tp, tcfg, dp, dcfg,
+            _kv_serve(backend, pool_pages if backend == "paged" else 0))
+        eng.serve_continuous(_kv_reqs(), num_slots=batch)        # warm the jit
+        res = min((eng.serve_continuous(_kv_reqs(), num_slots=batch)
+                   for _ in range(2)), key=lambda r: r.wall_s)
+        return eng, res
+
+    _, kv_dense = _kv_run("dense")
+    _, kv_paged = _kv_run("paged")
+    for rd, rp in zip(kv_dense.results, kv_paged.results):
+        assert np.array_equal(rd.tokens, rp.tokens), \
+            "paged backend diverged from dense on the serving workload"
+    assert kv_paged.kv_bytes < kv_dense.kv_bytes, (
+        f"paged KV footprint {kv_paged.kv_bytes} not below dense "
+        f"{kv_dense.kv_bytes} on the low-occupancy workload")
+    ratio = kv_paged.kv_bytes / max(kv_dense.kv_bytes, 1)
+    tput_ratio = kv_paged.aggregate_throughput / max(
+        kv_dense.aggregate_throughput, 1e-9)
+    csv.row(f"serve_kv_dense_x{batch}",
+            1e6 / max(kv_dense.aggregate_throughput, 1e-9),
+            f"{kv_dense.aggregate_throughput:.1f}tok/s_aggregate;"
+            f"peak_kv_bytes={kv_dense.kv_bytes}")
+    csv.row(f"serve_kv_paged_x{batch}",
+            1e6 / max(kv_paged.aggregate_throughput, 1e-9),
+            f"{kv_paged.aggregate_throughput:.1f}tok/s_aggregate;"
+            f"peak_kv_bytes={kv_paged.kv_bytes};bytes_vs_dense={ratio:.2f};"
+            f"tput_vs_dense={tput_ratio:.2f};"
+            f"page_occ={kv_paged.mean_page_occupancy:.2f}")
+    report["kv_store"] = {
+        "batch": batch, "requests": n_req, "pool_pages": pool_pages,
+        # fraction of the dense layout's token capacity the workload can
+        # ever occupy — the low-occupancy regime where paging pays
+        "dense_capacity_utilization":
+            pool_pages * sizer._page_size / (batch * 1024),
+        "dense_tok_s": kv_dense.aggregate_throughput,
+        "paged_tok_s": kv_paged.aggregate_throughput,
+        "throughput_ratio": tput_ratio,
+        "dense_peak_kv_bytes": kv_dense.kv_bytes,
+        "paged_peak_kv_bytes": kv_paged.kv_bytes,
+        "kv_bytes_ratio": ratio,
+        "mean_occupancy": kv_paged.mean_occupancy,
+        "mean_page_occupancy": kv_paged.mean_page_occupancy,
+        "peak_page_occupancy": kv_paged.peak_page_occupancy,
+        "token_equal": True}
 
     # quick mode goes to /tmp: the committed baseline only tracks full runs
     path = "/tmp/BENCH_e2e.quick.json" if quick else BENCH_JSON

@@ -1,10 +1,11 @@
 """Benchmark runner: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run              # everything
-  PYTHONPATH=src python -m benchmarks.run --only e2e   # one suite
-  PYTHONPATH=src python -m benchmarks.run --quick      # CPU-sized shapes,
-                                                       # seconds not minutes
+  PYTHONPATH=src python -m benchmarks.run                   # everything
+  PYTHONPATH=src python -m benchmarks.run --only e2e        # one suite
+  PYTHONPATH=src python -m benchmarks.run --only e2e,kernel # several suites
+  PYTHONPATH=src python -m benchmarks.run --quick           # CPU-sized shapes,
+                                                            # seconds not minutes
 """
 import argparse
 import inspect
@@ -34,18 +35,27 @@ def run_suite(modname: str, quick: bool) -> None:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names, e.g. --only e2e or "
+                         "--only e2e,kernel,quality")
     ap.add_argument("--quick", action="store_true",
                     help="tiny shapes/token counts so every suite finishes in "
                          "seconds — the tier-1 smoke-test mode")
     args = ap.parse_args(argv)
-    if args.only and args.only not in {n for n, _ in SUITES}:
-        ap.error(f"unknown suite {args.only!r}; choose from "
-                 f"{', '.join(n for n, _ in SUITES)}")
+    only = None
+    if args.only:
+        only = [s.strip() for s in args.only.split(",") if s.strip()]
+        valid = {n for n, _ in SUITES}
+        unknown = [s for s in only if s not in valid]
+        if unknown or not only:
+            bad = ", ".join(repr(s) for s in unknown) or repr(args.only)
+            ap.error(f"unknown suite {bad}; choose from "
+                     f"{', '.join(n for n, _ in SUITES)} "
+                     "(comma-separate for several, e.g. --only e2e,kernel)")
     print("name,us_per_call,derived")
     failures = 0
     for name, modname in SUITES:
-        if args.only and args.only != name:
+        if only is not None and name not in only:
             continue
         t0 = time.time()
         try:

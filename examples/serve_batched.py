@@ -13,12 +13,23 @@ seeded by `--arrival-seed`) and are admitted into `--slots` batch slots as
 rows free up — a per-slot re-prefill lands the new KV prefix in the donated
 batch cache mid-flight, instead of draining the whole batch between waves.
 The run reports per-request queue delay (virtual-step units), mean slot
-occupancy, and aggregate throughput:
+occupancy, and aggregate throughput.
+
+`--kv-backend paged` swaps the dense per-slot KV buffers for the paged
+store (`repro.core.kvstore`): one physical page pool shared by every
+request through per-row page tables, admission gated on free-page headroom,
+pages freed on completion — KV memory scales with live tokens instead of
+slots x max_context. `--kv-page-size` (default: the model's NSA sel_block,
+making selected-block gather a page-table lookup) and `--kv-num-pages`
+(pool capacity; 0 = worst case, no memory win) tune it. Token streams are
+byte-identical to the dense backend (tests/test_engine_paged.py).
 
   PYTHONPATH=src python examples/serve_batched.py --requests 4
   PYTHONPATH=src python examples/serve_batched.py --requests 4 --sequential
   PYTHONPATH=src python examples/serve_batched.py --requests 8 --continuous \\
       --slots 4 --arrival-rate 0.5
+  PYTHONPATH=src python examples/serve_batched.py --requests 8 --continuous \\
+      --slots 4 --kv-backend paged --kv-num-pages 48
 """
 import argparse
 import time
@@ -79,6 +90,14 @@ def main():
                          "for --continuous (<=0: all arrive at t=0)")
     ap.add_argument("--arrival-seed", type=int, default=0,
                     help="seed for the Poisson arrival replay")
+    ap.add_argument("--kv-backend", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV store: dense per-slot buffers, or the paged "
+                         "page-pool store (memory scales with live tokens)")
+    ap.add_argument("--kv-page-size", type=int, default=0,
+                    help="tokens per page (0 = model nsa.sel_block)")
+    ap.add_argument("--kv-num-pages", type=int, default=0,
+                    help="physical page-pool capacity (0 = worst case)")
     args = ap.parse_args()
 
     tp, cfg, dp, dcfg = build_models()
@@ -88,7 +107,10 @@ def main():
              for i in range(args.requests)]
     serve_cfg = ServeConfig(max_new_tokens=args.tokens, temperature=0.0,
                             max_context=1024, ssv=entries[0].strategy,
-                            use_planner=True)
+                            use_planner=True,
+                            kv_backend=args.kv_backend,
+                            kv_page_size=args.kv_page_size,
+                            kv_num_pages=args.kv_num_pages)
 
     t0 = time.time()
     if args.continuous:
@@ -112,6 +134,10 @@ def main():
         print(f"continuous: {res.steps} fused steps over {args.slots} slots, "
               f"mean occupancy {res.mean_occupancy:.2f}, "
               f"mean queue delay {res.mean_queue_delay_steps:.1f} steps")
+        if args.kv_backend == "paged":
+            print(f"paged KV store: {res.kv_bytes} raw-KV bytes, page "
+                  f"occupancy mean {res.mean_page_occupancy:.2f} / peak "
+                  f"{res.peak_page_occupancy:.2f}")
     elif args.sequential:
         total_tokens = 0
         for i, prompt in enumerate(queue):

@@ -283,3 +283,12 @@ class ServeConfig:
     max_context: int = 16384
     ssv: SSVConfig = field(default_factory=SSVConfig)
     use_planner: bool = True
+    # KV-cache store backend (core/kvstore.py): "dense" keeps per-request
+    # (max_context, ...) buffers; "paged" shares a physical page pool across
+    # requests through per-row page tables, so batch KV memory scales with
+    # live tokens. kv_page_size=0 -> the model's nsa.sel_block (selected-
+    # block gather becomes a page-table lookup); kv_num_pages=0 -> a pool
+    # sized for worst-case occupancy (slots * max_context / page_size).
+    kv_backend: str = "dense"
+    kv_page_size: int = 0
+    kv_num_pages: int = 0

@@ -5,8 +5,9 @@ draft    — draft model config + tree expansion
 accept   — greedy + stochastic (SpecInfer-style) tree acceptance
 overlap  — cross-query overlap stats, merged-schedule / shared-index builders
 engine   — the draft -> sparse-verify -> accept serving loop
+kvstore  — KV-cache store: dense + paged (page-table) backends, page allocator
 planner  — profile-guided prompt-adaptive orchestration (Algorithm 1)
 schedule — continuous-batching request queue/slot scheduler + IndexCache-style
            refresh/reuse greedy calibration
 """
-from repro.core import accept, draft, engine, overlap, planner, schedule, tree  # noqa: F401
+from repro.core import accept, draft, engine, kvstore, overlap, planner, schedule, tree  # noqa: F401

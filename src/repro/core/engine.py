@@ -42,6 +42,7 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig, SSVConfig
 from repro.core import accept as accept_lib
 from repro.core import draft as draft_lib
+from repro.core import kvstore
 from repro.core import schedule as schedule_lib
 from repro.core.tree import build_topology, children_matrix
 from repro.models import model
@@ -129,6 +130,54 @@ def jit_verify_accept(cfg: ModelConfig, ssv: SSVConfig, greedy: bool,
     return jax.jit(f, donate_argnums=(1,))
 
 
+def _resolve_store(serve_cfg: ServeConfig, target_cfg: ModelConfig) -> kvstore.KVStoreConfig:
+    """Pin the page size against the TARGET model once: target and draft
+    share one page table, so both pools must tile tokens identically (the
+    dense-attention draft has no sel_block constraint of its own)."""
+    store = kvstore.KVStoreConfig(serve_cfg.kv_backend, serve_cfg.kv_page_size,
+                                  serve_cfg.kv_num_pages)
+    if store.is_paged:
+        store = dataclasses.replace(
+            store, page_size=store.resolved_page_size(target_cfg))
+    return store
+
+
+def max_draft_gamma(serve_cfg: ServeConfig, planner) -> int:
+    """Largest draft-tree size any step can run: the base strategy plus —
+    when a planner is attached — every strategy in its profile (a mid-run
+    refinement can switch to any of them)."""
+    g = serve_cfg.ssv.num_draft_tokens()
+    profile = getattr(planner, "profile", None)
+    if profile is not None:
+        for entries in profile.table.values():
+            for e in entries:
+                g = max(g, e.strategy.num_draft_tokens())
+    return g
+
+
+def step_headroom(serve_cfg: ServeConfig, planner) -> int:
+    """Tokens a request's cache region must leave free beyond its budget: a
+    commit writes the whole padded accepted path before the budget check
+    truncates it. Both engines size admission (dense max_context bound AND
+    paged page reservation) with this one bound."""
+    return 2 * (max_draft_gamma(serve_cfg, planner) + 2)
+
+
+def request_pages(serve_cfg: ServeConfig, planner, page_size: int,
+                  max_pages: int, prompt_len: int,
+                  max_new_tokens: int = 0) -> int:
+    """Pages a request reserves for its whole life: committed prompt + token
+    budget + speculative-step overshoot (a commit writes the padded path
+    before the budget check truncates it), capped at the logical row
+    capacity. ONE function sizes both the single-stream and the batched
+    engines' reservations — page needs never grow mid-flight, so a full
+    pool can only delay admission, never deadlock or preempt a live row."""
+    budget = max_new_tokens or serve_cfg.max_new_tokens
+    toks = min(prompt_len - 1 + budget + step_headroom(serve_cfg, planner),
+               serve_cfg.max_context)
+    return min(kvstore.pages_needed(toks, page_size), max_pages)
+
+
 def step_host_transfer_elems(ssv: SSVConfig) -> int:
     """Elements the fused step hands to the host per iteration: the padded
     accepted-token vector plus the (bonus, n_accepted) scalars. Compare with
@@ -188,16 +237,49 @@ class SSVEngine:
         self.pending: Optional[int] = None
         self.prompt_len = 0
         self.committed_len = 0   # host-side mirror of caches["length"]
+        self.store = _resolve_store(serve_cfg, target_cfg)
+        self.allocator: Optional[kvstore.PageAllocator] = None
+        if self.store.is_paged:
+            self._page_size = self.store.page_size
+            self._max_pages = self.store.logical_pages(serve_cfg.max_context,
+                                                       self._page_size)
 
     # -------------------------------------------------------------- setup
-    def start(self, prompt_tokens: np.ndarray):
+    def start(self, prompt_tokens: np.ndarray, max_new_tokens: int = 0):
         """prompt_tokens: (S,) — prefill both models; the last prompt token
-        becomes the pending root of the first tree."""
+        becomes the pending root of the first tree. Under the paged store the
+        prefilled KV is re-homed into freshly allocated pages sized for
+        prompt + ``max_new_tokens`` (default: the serve config budget) +
+        speculative headroom."""
         toks = jnp.asarray(prompt_tokens, jnp.int32)[None]
         max_len = self.serve.max_context
         # prefill everything except the last token — it becomes the pending root
         _, self.t_caches = jit_prefill(self.tcfg, max_len)(self.tp, toks[:, :-1])
         _, self.d_caches = jit_prefill(self.dcfg, max_len)(self.dp, toks[:, :-1])
+        if self.store.is_paged:
+            need = request_pages(self.serve, self.planner, self._page_size,
+                                 self._max_pages, len(prompt_tokens),
+                                 max_new_tokens)
+            self.allocator = kvstore.PageAllocator(
+                self.store.resolved_num_pages(1, self._max_pages))
+            pg = self.allocator.alloc(need)
+            if pg is None:
+                raise ValueError(
+                    f"kv_num_pages={self.allocator.num_pages} pages cannot "
+                    f"hold this request ({need} pages needed)")
+            row = np.full((self._max_pages,), -1, np.int32)
+            row[:need] = pg
+            rowj = jnp.asarray(row)
+
+            def rehome(cfg, dense_caches):
+                segs = model.init_caches(cfg, 1, max_len, self.store)["segments"]
+                segs = kvstore.admit_row_paged(segs, dense_caches["segments"],
+                                               jnp.int32(0), rowj)
+                return {"segments": segs, "length": dense_caches["length"],
+                        "pages": rowj[None]}
+
+            self.t_caches = rehome(self.tcfg, self.t_caches)
+            self.d_caches = rehome(self.dcfg, self.d_caches)
         self.pending = int(prompt_tokens[-1])
         self.prompt_len = len(prompt_tokens)
         self.committed_len = self.prompt_len - 1
@@ -264,7 +346,7 @@ class SSVEngine:
     def generate(self, prompt_tokens: np.ndarray, max_new_tokens: int = 0,
                  eos_id: int = -1) -> GenerationResult:
         max_new = max_new_tokens or self.serve.max_new_tokens
-        self.start(np.asarray(prompt_tokens))
+        self.start(np.asarray(prompt_tokens), max_new_tokens=max_new)
         out: List[int] = []
         steps: List[StepStats] = []
         while len(out) < max_new:
@@ -280,6 +362,14 @@ class SSVEngine:
             if self.committed_len + 2 * (st.gamma + 2) >= self.serve.max_context:
                 break
         return GenerationResult(tokens=np.asarray(out), steps=steps)
+
+    def kv_cache_bytes(self) -> int:
+        """Raw-KV footprint of the live caches (both models)."""
+        total = 0
+        for caches in (self.t_caches, self.d_caches):
+            if caches is not None:
+                total += kvstore.kv_cache_bytes(caches["segments"])
+        return total
 
 
 # ------------------------------------------------------------ batched engine
@@ -301,7 +391,8 @@ class BatchGenerationResult:
 
 @functools.lru_cache(maxsize=32)
 def jit_batched_step(tcfg: ModelConfig, dcfg: ModelConfig, ssv: SSVConfig,
-                     greedy: bool, temperature: float):
+                     greedy: bool, temperature: float,
+                     store: kvstore.KVStoreConfig = kvstore.DENSE):
     """One fully fused, batch-vectorized SSV step.
 
     The entire draft-expand → tree-verify → accept → commit chain is traced
@@ -323,6 +414,13 @@ def jit_batched_step(tcfg: ModelConfig, dcfg: ModelConfig, ssv: SSVConfig,
                             bonus_u (R,))
       -> (t_segs', t_len', d_segs', d_len', tokens (R, pad+1), n_acc (R,))
     where segs are the caches' "segments" pytrees with leaf batch axis 1.
+
+    Paged store: the signature gains ``pages`` (R, max_pages) after
+    ``d_len``. Raw-KV leaves of both segs are the models' shared page pools
+    (no batch axis — every row reads them through its page-table row inside
+    the vmap), so the per-row trace runs ``commit_paged_prepare`` only and
+    the pool scatters are issued once at batch level, where rows cannot
+    alias (the allocator never double-assigns a page).
     """
     topo = build_topology(ssv.tree_depth, ssv.tree_width, ssv.traversal,
                           ssv.tree_budget)
@@ -332,6 +430,76 @@ def jit_batched_step(tcfg: ModelConfig, dcfg: ModelConfig, ssv: SSVConfig,
     child_mat = jnp.asarray(children_matrix(topo))
     maxd = int(topo.depths.max()) if topo.num_nodes else 0
     T = topo.num_nodes
+
+    if store.is_paged:
+        def row_prep(tp, dp, t_segs, t_len, d_segs, d_len, pages_row, pending,
+                     active, accept_fn):
+            rebatch = lambda segs: kvstore.map_segments(
+                segs, lambda a: a, lambda a: a[:, None])
+            t_caches = {"segments": rebatch(t_segs), "length": t_len,
+                        "pages": pages_row[None]}
+            d_caches = {"segments": rebatch(d_segs), "length": d_len,
+                        "pages": pages_row[None]}
+            tokens, node_q, d_updates = draft_lib.expand_tree(
+                lambda caches, tk, pos, tm, par: model.verify_step(
+                    dp, dcfg, caches, tk, pos, tm, par, None),
+                dcfg, d_caches, topo, pending[None], temperature=temperature)
+            positions = (depths[None] + t_len).astype(jnp.int32)
+            logits, t_updates = model.verify_step(
+                tp, tcfg, t_caches, tokens, positions, tmask[None], parents, ssv)
+            path, out_tokens, bonus, n_acc = accept_fn(tokens[0], logits[0],
+                                                       node_q[0])
+            n_commit = jnp.where(active, n_acc + 1, 0)[None]
+            t_prep, t_new_len = model.commit_paged_prepare(
+                tp, tcfg, t_caches, t_updates, path[None], n_commit)
+            d_prep, d_new_len = model.commit_paged_prepare(
+                dp, dcfg, d_caches, d_updates, path[None], n_commit)
+            strip = lambda tree: jax.tree.map(lambda a: a[:, 0], tree)
+            return (strip(t_prep), t_new_len, strip(d_prep), d_new_len,
+                    out_tokens, n_acc)
+
+        if greedy:
+            def row_step(tp, dp, t_segs, t_len, d_segs, d_len, pages_row,
+                         pending, active):
+                return row_prep(tp, dp, t_segs, t_len, d_segs, d_len,
+                                pages_row, pending, active, lambda tk, lg, _q:
+                                accept_lib.greedy_tree_accept_device(
+                                    child_mat, maxd, tk, lg))
+            extra_axes = ()
+        else:
+            def row_step(tp, dp, t_segs, t_len, d_segs, d_len, pages_row,
+                         pending, active, accept_u, bonus_u):
+                return row_prep(tp, dp, t_segs, t_len, d_segs, d_len,
+                                pages_row, pending, active, lambda tk, lg, q:
+                                accept_lib.stochastic_tree_accept_device(
+                                    child_mat, maxd, tk, lg, q, accept_u,
+                                    bonus_u, temperature))
+            extra_axes = (0, 0)
+
+        def f(tp, dp, t_segs, t_len, d_segs, d_len, pages, pending, active,
+              admit_mask, admit_len, admit_pending, *rest):
+            t_len = jnp.where(admit_mask, admit_len, t_len)
+            d_len = jnp.where(admit_mask, admit_len, d_len)
+            pending = jnp.where(admit_mask, admit_pending, pending)
+            # pool leaves are shared (unmapped); every other cache leaf is
+            # row-batched on axis 1 as in the dense step
+            t_axes = kvstore.map_segments(t_segs, lambda _: None, lambda _: 1)
+            d_axes = kvstore.map_segments(d_segs, lambda _: None, lambda _: 1)
+            vstep = jax.vmap(row_step,
+                             in_axes=(None, None, t_axes, 0, d_axes, 0, 0, 0, 0)
+                             + extra_axes,
+                             out_axes=(1, 0, 1, 0, 0, 0))
+            (t_prep, t_new_len, d_prep, d_new_len, out_tokens,
+             n_acc) = vstep(tp, dp, t_segs, t_len, d_segs, d_len, pages,
+                            pending, active, *rest)
+            n_commit = jnp.where(active, n_acc + 1, 0)
+            new_t = model.commit_apply_paged(t_segs, t_prep, pages, t_len,
+                                             n_commit)
+            new_d = model.commit_apply_paged(d_segs, d_prep, pages, d_len,
+                                             n_commit)
+            return new_t, t_new_len, new_d, d_new_len, out_tokens, n_acc
+
+        return jax.jit(f, donate_argnums=(2, 3, 4, 5))
 
     def row_core(tp, dp, t_segs, t_len, d_segs, d_len, pending, active,
                  accept_fn):
@@ -432,22 +600,24 @@ class BatchedSSVEngine:
         self._admit_mask: Optional[np.ndarray] = None
         self._admit_len: Optional[np.ndarray] = None
         self._admit_pending: Optional[np.ndarray] = None
+        # KV store backend: one page pool + one page table serve BOTH models
+        # (same logical token positions per row; per-model pools differ only
+        # in head geometry / layer count)
+        self.store = _resolve_store(serve_cfg, target_cfg)
+        self.allocator: Optional[kvstore.PageAllocator] = None
+        self.pages: Optional[np.ndarray] = None          # (R, max_pages) host
+        self._slot_pages: Dict[int, np.ndarray] = {}
+        if self.store.is_paged:
+            self._page_size = self.store.page_size
+            self._max_pages = self.store.logical_pages(serve_cfg.max_context,
+                                                       self._page_size)
 
     # -------------------------------------------------------------- setup
     def _max_gamma(self) -> int:
-        """Largest draft-tree size any step of this engine can run: the base
-        strategy, plus — when a planner is attached — every strategy in its
-        profile (a mid-run refinement can switch to any of them)."""
-        g = self.serve.ssv.num_draft_tokens()
-        profile = getattr(self.planner, "profile", None)
-        if profile is not None:
-            for entries in profile.table.values():
-                for e in entries:
-                    g = max(g, e.strategy.num_draft_tokens())
-        return g
+        return max_draft_gamma(self.serve, self.planner)
 
     def _step_headroom(self) -> int:
-        return 2 * (self._max_gamma() + 2)
+        return step_headroom(self.serve, self.planner)
 
     def _check_prompt(self, p: np.ndarray, what: str = "prompt"):
         if len(p) == 0:
@@ -471,6 +641,25 @@ class BatchedSSVEngine:
         self._admit_len = np.zeros((R,), np.int32)
         self._admit_pending = np.zeros((R,), np.int32)
 
+    # ------------------------------------------------------------ page math
+    def pages_for(self, prompt_len: int, max_new_tokens: int = 0) -> int:
+        """Full-life page reservation for one request — see
+        ``request_pages`` (shared with the single-stream engine)."""
+        return request_pages(self.serve, self.planner, self._page_size,
+                             self._max_pages, prompt_len, max_new_tokens)
+
+    def _free_slot_pages(self, slot: int):
+        pg = self._slot_pages.pop(slot, None)
+        if pg is not None:
+            self.allocator.free(pg)
+            self.pages[slot] = -1
+
+    def kv_cache_bytes(self) -> int:
+        """Raw-KV footprint of the serving caches (both models) — dense:
+        slots x max_context rows; paged: the shared page pools."""
+        return (kvstore.kv_cache_bytes(self.t_segs)
+                + kvstore.kv_cache_bytes(self.d_segs))
+
     def start(self, prompts: Sequence[np.ndarray]):
         R = len(prompts)
         if R < 1:
@@ -478,6 +667,16 @@ class BatchedSSVEngine:
         prompts = [np.asarray(p) for p in prompts]
         for i, p in enumerate(prompts):
             self._check_prompt(p, what=f"prompt {i}")
+        if self.store.is_paged:
+            # one code path for every paged admission: empty slots + the
+            # per-slot admit that allocates the row's pages
+            self.start_empty(R)
+            for i, p in enumerate(prompts):
+                self.admit(i, p)
+            if self.planner is not None:
+                self.planner.begin_request(
+                    context_len=int(np.max([len(p) for p in prompts])))
+            return
         max_len = self.serve.max_context
         t_parts, d_parts = [], []
         for p in prompts:
@@ -510,17 +709,24 @@ class BatchedSSVEngine:
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         max_len = self.serve.max_context
-        self.t_segs = model.init_caches(self.tcfg, num_slots, max_len)["segments"]
-        self.d_segs = model.init_caches(self.dcfg, num_slots, max_len)["segments"]
+        self.t_segs = model.init_caches(self.tcfg, num_slots, max_len,
+                                        self.store)["segments"]
+        self.d_segs = model.init_caches(self.dcfg, num_slots, max_len,
+                                        self.store)["segments"]
         self.t_len = jnp.zeros((num_slots,), jnp.int32)
         self.d_len = jnp.zeros((num_slots,), jnp.int32)
         self.pending = np.zeros((num_slots,), np.int32)
         self.committed_len = np.zeros((num_slots,), np.int64)
         self.batch = num_slots
         self._reset_admission(num_slots)
+        if self.store.is_paged:
+            self.allocator = kvstore.PageAllocator(
+                self.store.resolved_num_pages(num_slots, self._max_pages))
+            self.pages = np.full((num_slots, self._max_pages), -1, np.int32)
+            self._slot_pages = {}
 
     # -------------------------------------------------------------- admission
-    def admit(self, slot: int, prompt: np.ndarray):
+    def admit(self, slot: int, prompt: np.ndarray, max_new_tokens: int = 0):
         """Mid-flight admission: re-prefill ``prompt`` and write its fresh KV
         prefix into batch row ``slot`` (donated in-place row write — other
         rows' cache bytes are untouched). The device-side length and pending
@@ -528,10 +734,16 @@ class BatchedSSVEngine:
         admission mask, so admission costs one prefill plus one row write,
         and no extra device launch.
 
+        Paged store: admission first allocates the request's pages (see
+        ``pages_for`` — ``max_new_tokens`` bounds the reservation) and maps
+        them into the slot's page-table row; the prompt KV is then scattered
+        into those pages. Callers gate on free-page headroom (the scheduler
+        does) — admitting past the pool raises rather than corrupting rows.
+
         NOTE: the prefill jit retraces per prompt LENGTH — the first
         admission at a previously-unseen length pays an XLA compile while
         in-flight rows wait. Serving traffic with many distinct lengths
-        should bucket/pad prompts to a few lengths (ROADMAP: paged caches)."""
+        should bucket/pad prompts to a few lengths."""
         if not 0 <= slot < self.batch:
             raise ValueError(f"slot {slot} out of range for batch {self.batch}")
         prompt = np.asarray(prompt)
@@ -540,8 +752,27 @@ class BatchedSSVEngine:
         toks = jnp.asarray(prompt, jnp.int32)[None]
         _, tc = jit_prefill(self.tcfg, max_len)(self.tp, toks[:, :-1])
         _, dc = jit_prefill(self.dcfg, max_len)(self.dp, toks[:, :-1])
-        self.t_segs = admit_row_segments(self.t_segs, tc["segments"], slot)
-        self.d_segs = admit_row_segments(self.d_segs, dc["segments"], slot)
+        if self.store.is_paged:
+            self._free_slot_pages(slot)      # stale mapping of a past tenant
+            need = self.pages_for(len(prompt), max_new_tokens)
+            pg = self.allocator.alloc(need)
+            if pg is None:
+                raise RuntimeError(
+                    f"page pool exhausted admitting into slot {slot}: need "
+                    f"{need} pages, {self.allocator.free_count} free — gate "
+                    "admission on free-page headroom (Scheduler pages_for)")
+            self._slot_pages[slot] = pg
+            row = np.full((self._max_pages,), -1, np.int32)
+            row[:need] = pg
+            self.pages[slot] = row
+            rowj = jnp.asarray(row)
+            self.t_segs = kvstore.admit_row_paged(self.t_segs, tc["segments"],
+                                                  jnp.int32(slot), rowj)
+            self.d_segs = kvstore.admit_row_paged(self.d_segs, dc["segments"],
+                                                  jnp.int32(slot), rowj)
+        else:
+            self.t_segs = admit_row_segments(self.t_segs, tc["segments"], slot)
+            self.d_segs = admit_row_segments(self.d_segs, dc["segments"], slot)
         self._admit_mask[slot] = True
         self._admit_len[slot] = len(prompt) - 1
         self._admit_pending[slot] = int(prompt[-1])
@@ -559,12 +790,15 @@ class BatchedSSVEngine:
         ssv = strategy or (self.planner.current() if self.planner else self.serve.ssv)
         greedy = self.serve.temperature == 0.0
         step_fn = jit_batched_step(self.tcfg, self.dcfg, ssv, greedy,
-                                   self.serve.temperature)
+                                   self.serve.temperature, self.store)
         args = [self.tp, self.dp, self.t_segs, self.t_len, self.d_segs,
-                self.d_len, jnp.asarray(self.pending), jnp.asarray(active),
-                jnp.asarray(self._admit_mask),
-                jnp.asarray(self._admit_len, jnp.int32),
-                jnp.asarray(self._admit_pending, jnp.int32)]
+                self.d_len]
+        if self.store.is_paged:
+            args.append(jnp.asarray(self.pages))
+        args += [jnp.asarray(self.pending), jnp.asarray(active),
+                 jnp.asarray(self._admit_mask),
+                 jnp.asarray(self._admit_len, jnp.int32),
+                 jnp.asarray(self._admit_pending, jnp.int32)]
         self._admit_mask = np.zeros_like(self._admit_mask)
         if not greedy:
             topo = build_topology(ssv.tree_depth, ssv.tree_width,
@@ -629,7 +863,23 @@ class BatchedSSVEngine:
         for r in reqs:   # fail fast, before any slot state exists
             self._check_prompt(np.asarray(r.prompt),
                                what=f"request {r.req_id} prompt")
-        sched = schedule_lib.Scheduler(num_slots)
+        if self.store.is_paged:
+            total_pages = self.store.resolved_num_pages(num_slots,
+                                                        self._max_pages)
+            pages_of = lambda r: self.pages_for(
+                len(r.prompt), r.max_new_tokens or max_new_default)
+            for r in reqs:   # a request bigger than the POOL can never admit
+                if pages_of(r) > total_pages:
+                    raise ValueError(
+                        f"request {r.req_id} needs {pages_of(r)} KV pages but "
+                        f"the pool has {total_pages}; raise kv_num_pages or "
+                        "shrink the prompt/token budget")
+            sched = schedule_lib.Scheduler(
+                num_slots, pages_for=pages_of,
+                free_pages=lambda: self.allocator.free_count,
+                total_pages=total_pages)
+        else:
+            sched = schedule_lib.Scheduler(num_slots)
         for r in reqs:
             sched.submit(r)
         self.start_empty(num_slots)
@@ -640,6 +890,7 @@ class BatchedSSVEngine:
         outs: Dict[int, List[int]] = {r.req_id: [] for r in reqs}
         step_logs: Dict[int, List[StepStats]] = {r.req_id: [] for r in reqs}
         occupancy: List[float] = []
+        page_occupancy: List[float] = []
         # context stop bound sized for the LARGEST strategy the planner can
         # switch to (a switch lands one step after this check runs)
         stop_margin = self._step_headroom()
@@ -650,16 +901,20 @@ class BatchedSSVEngine:
         safety = 4 * budget + 16 * len(reqs) + 16
         while not sched.idle():
             for slot, req in sched.admit(clock):
-                self.admit(slot, req.prompt)
+                self.admit(slot, req.prompt,
+                           max_new_tokens=req.max_new_tokens or max_new_default)
                 sched.mark_decoding(slot)
             active = sched.decoding_mask()
             if not active.any():
-                # arrival gap: jump the virtual clock to the next arrival
+                # arrival gap (or page-gated head-of-line wait): jump the
+                # virtual clock to the next arrival
                 nxt = sched.next_arrival()
                 clock = max(clock + 1.0,
                             float(nxt) if nxt is not None else clock + 1.0)
                 continue
             occupancy.append(float(active.sum()) / num_slots)
+            if self.store.is_paged:
+                page_occupancy.append(sched.page_occupancy())
             ssv = (self.planner.current() if self.planner else self.serve.ssv)
             gamma = build_topology(ssv.tree_depth, ssv.tree_width,
                                    ssv.traversal, ssv.tree_budget).num_nodes - 1
@@ -687,6 +942,8 @@ class BatchedSSVEngine:
                     finished = True
                 if finished:
                     sched.finish(slot, now=clock + 1.0)
+                    if self.store.is_paged:
+                        self._free_slot_pages(slot)   # pages return to pool
                     sched.release(slot)
             if self.planner is not None and accepted_active:
                 self.planner.observe(accepted=float(np.mean(accepted_active)),
@@ -700,7 +957,9 @@ class BatchedSSVEngine:
                                     steps=step_logs[r.req_id]) for r in reqs]
         return ContinuousServeResult(results=results, requests=reqs,
                                      steps=n_steps, wall_s=wall,
-                                     occupancy=occupancy)
+                                     occupancy=occupancy,
+                                     page_occupancy=page_occupancy,
+                                     kv_bytes=self.kv_cache_bytes())
 
 
 @dataclasses.dataclass
@@ -713,6 +972,10 @@ class ContinuousServeResult:
     steps: int
     wall_s: float
     occupancy: List[float]       # per-fused-step busy-slot fraction
+    # paged KV store only: per-fused-step allocated-page fraction + the raw
+    # KV footprint of the run's caches (pool bytes; dense: row bytes)
+    page_occupancy: List[float] = dataclasses.field(default_factory=list)
+    kv_bytes: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -725,6 +988,14 @@ class ContinuousServeResult:
     @property
     def mean_occupancy(self) -> float:
         return float(np.mean(self.occupancy)) if self.occupancy else 0.0
+
+    @property
+    def mean_page_occupancy(self) -> float:
+        return float(np.mean(self.page_occupancy)) if self.page_occupancy else 0.0
+
+    @property
+    def peak_page_occupancy(self) -> float:
+        return float(np.max(self.page_occupancy)) if self.page_occupancy else 0.0
 
     @property
     def mean_queue_delay_steps(self) -> float:

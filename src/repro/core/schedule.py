@@ -72,12 +72,31 @@ class RequestQueue:
 
     def pop_arrived(self, now: float) -> Optional[Request]:
         """Earliest-arrival request with arrival <= now (stable on ties)."""
+        best_i = self._best_arrived(now)
+        return self._items.pop(best_i) if best_i is not None else None
+
+    def peek_arrived(self, now: float) -> Optional[Request]:
+        """Like pop_arrived but non-destructive — admission gates (free
+        slots AND free pages) inspect the head before committing to it."""
+        best_i = self._best_arrived(now)
+        return self._items[best_i] if best_i is not None else None
+
+    def remove(self, req: Request) -> None:
+        """Identity-based removal: dataclass __eq__ would compare the
+        ndarray prompt field (ambiguous truth value)."""
+        for i, r in enumerate(self._items):
+            if r is req:
+                self._items.pop(i)
+                return
+        raise ValueError(f"request {req.req_id} is not in the queue")
+
+    def _best_arrived(self, now: float) -> Optional[int]:
         best_i = None
         for i, r in enumerate(self._items):
             if r.arrival <= now and (best_i is None
                                      or r.arrival < self._items[best_i].arrival):
                 best_i = i
-        return self._items.pop(best_i) if best_i is not None else None
+        return best_i
 
     def next_arrival(self) -> Optional[float]:
         return min((r.arrival for r in self._items), default=None)
@@ -90,12 +109,29 @@ class Scheduler:
     DECODING --finish--> FINISHED --release--> FREE. Transition methods
     raise on invalid moves so engine bugs surface as errors, not silent
     double-assignments.
+
+    Paged-KV gating: when ``pages_for`` / ``free_pages`` are supplied (the
+    engine's page accounting), admission requires BOTH a free slot and
+    enough free pages for the request's whole reservation. The FIFO head
+    blocks admission while it does not fit (no overtaking — pages free as
+    decoding rows finish, so head-of-line waits resolve; a request larger
+    than the entire pool is rejected by the engine at submit time, which is
+    what keeps the wait from becoming a deadlock). ``page_occupancy()``
+    reports the allocated-page fraction for serving stats.
     """
 
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int,
+                 pages_for: Optional[Callable[[Request], int]] = None,
+                 free_pages: Optional[Callable[[], int]] = None,
+                 total_pages: Optional[int] = None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if (pages_for is None) != (free_pages is None):
+            raise ValueError("pages_for and free_pages come as a pair")
         self.num_slots = num_slots
+        self.pages_for = pages_for
+        self.free_pages = free_pages
+        self.total_pages = total_pages
         self.queue = RequestQueue()
         self.states: List[SlotState] = [SlotState.FREE] * num_slots
         self.slot_req: List[Optional[Request]] = [None] * num_slots
@@ -108,14 +144,25 @@ class Scheduler:
     # ------------------------------------------------------------ admission
     def admit(self, now: float) -> List[Tuple[int, Request]]:
         """Assign arrived queued requests to FREE slots (FIFO), marking each
-        slot PREFILLING. Returns the (slot, request) assignments made."""
+        slot PREFILLING. With page gating, a request is only placed while
+        its page reservation fits the pool's free-page headroom (pages
+        claimed by requests placed earlier in this same call are counted);
+        otherwise the queue stays pending. Returns the (slot, request)
+        assignments made."""
         placed: List[Tuple[int, Request]] = []
+        reserved = 0
         for slot in range(self.num_slots):
             if self.states[slot] is not SlotState.FREE:
                 continue
-            req = self.queue.pop_arrived(now)
+            req = self.queue.peek_arrived(now)
             if req is None:
                 break
+            if self.pages_for is not None:
+                need = self.pages_for(req)
+                if need > self.free_pages() - reserved:
+                    break            # head-of-line wait for pages, FIFO-fair
+                reserved += need
+            self.queue.remove(req)
             if self.slot_req[slot] is not None:
                 raise RuntimeError(f"slot {slot} is FREE but still holds "
                                    f"request {self.slot_req[slot].req_id}")
@@ -158,6 +205,12 @@ class Scheduler:
     def occupancy(self) -> float:
         busy = sum(s is not SlotState.FREE for s in self.states)
         return busy / self.num_slots
+
+    def page_occupancy(self) -> float:
+        """Allocated fraction of the KV page pool (0.0 when not page-gated)."""
+        if self.free_pages is None or not self.total_pages:
+            return 0.0
+        return 1.0 - self.free_pages() / self.total_pages
 
     def next_arrival(self) -> Optional[float]:
         return self.queue.next_arrival()

@@ -58,17 +58,22 @@ def make_kernel(*, C: int, Gq: int, Dh: int, M: int, TC: int, NCB_T: int,
                 TW: int, WT: int, Tp: int, sel_block: int, cmp_block: int,
                 cmp_stride: int, window: int, include_cmp: bool,
                 include_sel: bool, include_win: bool, combine: bool,
-                has_cmp_in: bool):
+                has_cmp_in: bool, paged: bool = False):
     R = C * Gq
     CMP_STEPS = NCB_T if include_cmp else 0
     SEL_STEPS = M if include_sel else 0
     WIN_STEPS = (WT + 1) if include_win else 0     # +1 = draft tile step
     TOTAL = max(CMP_STEPS + SEL_STEPS + WIN_STEPS, 1)
 
-    def kernel(s_merged, s_mvalid, s_own, s_pos, s_scalar,
-               q_ref, kcmp_ref, vcmp_ref, kblk_ref, vblk_ref, kwin_ref,
-               vwin_ref, kdr_ref, vdr_ref, gates_ref, dmask_ref,
-               *rest):
+    def kernel(s_merged, s_mvalid, s_own, s_pos, s_scalar, *tail):
+        # paged store: the scalar-prefetched page table drives the BlockSpec
+        # index_map (logical block -> physical pool block); the kernel body
+        # itself stays position-based on LOGICAL indices, so the masks below
+        # are backend-oblivious.
+        if paged:
+            _s_pages, *tail = tail
+        (q_ref, kcmp_ref, vcmp_ref, kblk_ref, vblk_ref, kwin_ref,
+         vwin_ref, kdr_ref, vdr_ref, gates_ref, dmask_ref, *rest) = tail
         if has_cmp_in:
             ocmp_ref, o_ref, acc_ref, l_ref, m_ref = rest
         else:
@@ -155,10 +160,17 @@ def build_verify_call(*, B: int, G: int, Hkv: int, C: int, Gq: int, Dh: int,
                       include_cmp: bool = True, include_sel: bool = True,
                       include_win: bool = True, combine: bool = True,
                       has_cmp_in: bool = False, out_dtype=jnp.float32,
-                      interpret: bool = True):
-    """Returns fn(s_merged, s_mvalid, s_own, s_pos, s_scalar, q_grp, k_cmp,
-    v_cmp, k_blkd, v_blkd, k_win, v_win, k_draft, v_draft, gates_grp,
-    dmask_grp[, o_cmp_grp]) -> o_grp (B, G, Hkv, R, Dh)."""
+                      interpret: bool = True, paged: bool = False,
+                      blocks_per_page: int = 1, max_pages: int = 0):
+    """Returns fn(s_merged, s_mvalid, s_own, s_pos, s_scalar[, s_pages],
+    q_grp, k_cmp, v_cmp, k_blkd, v_blkd, k_win, v_win, k_draft, v_draft,
+    gates_grp, dmask_grp[, o_cmp_grp]) -> o_grp (B, G, Hkv, R, Dh).
+
+    ``paged``: ``s_merged`` carries LOGICAL selection-block indices and the
+    extra ``s_pages`` (B, max_pages) scalar-prefetch input maps them to
+    physical pool blocks inside the slc BlockSpec index_map — the
+    paged-attention gather pattern; ``NSB`` is then the PHYSICAL block count
+    of the (batch-broadcast) pool."""
     R = C * Gq
     TC = min(TC, NCBp)
     TW = min(TW, Wp)
@@ -168,7 +180,8 @@ def build_verify_call(*, B: int, G: int, Hkv: int, C: int, Gq: int, Dh: int,
         C=C, Gq=Gq, Dh=Dh, M=M, TC=TC, NCB_T=NCB_T, TW=TW, WT=WT, Tp=Tp,
         sel_block=sel_block, cmp_block=cmp_block, cmp_stride=cmp_stride,
         window=window, include_cmp=include_cmp, include_sel=include_sel,
-        include_win=include_win, combine=combine, has_cmp_in=has_cmp_in)
+        include_win=include_win, combine=combine, has_cmp_in=has_cmp_in,
+        paged=paged)
 
     grid = (B, G, Hkv, TOTAL)
     CMP_STEPS = NCB_T if include_cmp else 0
@@ -180,6 +193,19 @@ def build_verify_call(*, B: int, G: int, Hkv: int, C: int, Gq: int, Dh: int,
     def blk_tile(b, g, h, w, *s):
         s_merged = s[0]
         m = jnp.clip(w - CMP_STEPS, 0, M - 1)
+        if paged:
+            # logical -> physical: page-table lookup + sub-block offset.
+            # Invalid / unmapped blocks were already devalidated (mvalid=0)
+            # by the prep layer, so the clips only pick a safe fetch target.
+            # The pool is shared across the batch (leading dim 1): batch
+            # coordinate 0, row identity lives in the page table.
+            blk = jnp.clip(s_merged[b, g, h, m], 0,
+                           max_pages * blocks_per_page - 1)
+            s_pages = s[5]
+            phys = s_pages[b, blk // blocks_per_page]
+            blk = jnp.clip(phys * blocks_per_page + blk % blocks_per_page,
+                           0, NSB - 1)
+            return (0, blk, 0, h, 0)
         blk = jnp.clip(s_merged[b, g, h, m], 0, NSB - 1)
         return (b, blk, 0, h, 0)
 
@@ -207,7 +233,7 @@ def build_verify_call(*, B: int, G: int, Hkv: int, C: int, Gq: int, Dh: int,
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=5,
+            num_scalar_prefetch=6 if paged else 5,
             grid=grid,
             in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, 1, R, Dh),

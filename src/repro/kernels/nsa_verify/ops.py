@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import NSAConfig
-from repro.core import overlap
+from repro.core import kvstore, overlap
 from repro.kernels.nsa_verify import kernel as K
 
 
@@ -81,17 +81,34 @@ def nsa_verify_fused(q, k_cache, v_cache, k_cmp, v_cmp, k_draft, v_draft,
                      mode: str = "exact", include_cmp: bool = True,
                      o_cmp_in=None, combine: bool = True,
                      include_sel: bool = True, include_win: bool = True,
-                     interpret: bool = True):
+                     interpret: bool = True, page_table=None):
     """Fused grouped-query NSA verification (see kernel.py docstring).
 
     q: (B,T,Hq,Dh) — ALREADY rope'd and scaled by 1/sqrt(Dh).
     Returns (B, T, Hq, Dh) f32.
+
+    ``page_table`` (B, max_pages) int32 switches the KV inputs to the paged
+    store: ``k_cache``/``v_cache`` are then the shared page pool
+    (P, page_size, Hkv, Dh). Selected-block indices are resolved through the
+    page table in the jnp prep layer (fusing into the surrounding XLA graph,
+    like the merged-schedule build): logical block -> physical pool block
+    for the slc gather index_map, and the win branch's trailing slice is
+    gathered from the row's pages. Unmapped / out-of-range blocks are
+    masked, not clamped. The kernel itself is oblivious to paging — it sees
+    pre-resolved physical block indices (ref parity:
+    tests/test_kernels_nsa_verify.py::test_fused_paged_matches_dense).
     """
     B, T, Hq, Dh = q.shape
-    S = k_cache.shape[1]
-    Hkv = k_cache.shape[2]
-    Gq = Hq // Hkv
     lb = nsa.sel_block
+    paged = page_table is not None
+    if paged:
+        ps = k_cache.shape[1]
+        S = page_table.shape[1] * ps
+        Hkv = k_cache.shape[2]
+    else:
+        S = k_cache.shape[1]
+        Hkv = k_cache.shape[2]
+    Gq = Hq // Hkv
 
     q_grp, gates_grp, merged, mvalid, own, pos_grp, gi = prepare_groups(
         q, gates, sel_idx, sel_valid, positions, C, mode, nsa.n_selected)
@@ -99,11 +116,35 @@ def nsa_verify_fused(q, k_cache, v_cache, k_cmp, v_cmp, k_draft, v_draft,
     M = merged.shape[-1]
     R = C * Gq
 
-    # cache reshaped into selection blocks for the gather index_map
-    Sp = -(-S // lb) * lb
-    NSB = Sp // lb
-    k_blkd = _pad_axis(k_cache, 1, Sp).reshape(B, NSB, lb, Hkv, Dh)
-    v_blkd = _pad_axis(v_cache, 1, Sp).reshape(B, NSB, lb, Hkv, Dh)
+    if paged:
+        # pages tile selection blocks (page_size % sel_block == 0), so the
+        # BlockSpec index_map resolves a LOGICAL merged block to a physical
+        # pool block via the scalar-prefetched page table; ``merged`` stays
+        # logical (the kernel's prefix/causal masks are position-based).
+        # Unmapped pages only get their validity bit cleared here.
+        m = ps // lb
+        P = k_cache.shape[0]
+        NSB = P * m                                      # physical blocks
+        nsb_logical = page_table.shape[1] * m
+        lp = jnp.clip(jnp.where(merged >= 0, merged, 0) // m, 0,
+                      page_table.shape[1] - 1)
+        phys_pg = jnp.take_along_axis(
+            page_table, lp.reshape(B, -1), axis=1).reshape(lp.shape)
+        mvalid = jnp.where((merged >= 0) & (phys_pg >= 0), mvalid, 0)
+        merged = jnp.where(mvalid > 0, merged, -1)
+        # the pool stays SHARED (leading dim 1, never broadcast-materialized
+        # to B copies — that would forfeit paging's memory win); the paged
+        # blk index_map pins the pool's batch coordinate to 0 and the page
+        # table supplies the per-row physical block
+        k_blkd = k_cache.reshape(1, P * m, lb, Hkv, Dh)
+        v_blkd = v_cache.reshape(1, P * m, lb, Hkv, Dh)
+    else:
+        # cache reshaped into selection blocks for the gather index_map
+        Sp = -(-S // lb) * lb
+        NSB = Sp // lb
+        nsb_logical = NSB
+        k_blkd = _pad_axis(k_cache, 1, Sp).reshape(B, NSB, lb, Hkv, Dh)
+        v_blkd = _pad_axis(v_cache, 1, Sp).reshape(B, NSB, lb, Hkv, Dh)
 
     # compressed cache padded to the cmp tile
     NCB = k_cmp.shape[1]
@@ -112,11 +153,11 @@ def nsa_verify_fused(q, k_cache, v_cache, k_cmp, v_cmp, k_draft, v_draft,
     k_cmp_p = _pad_axis(k_cmp, 1, NCBp)
     v_cmp_p = _pad_axis(v_cmp, 1, NCBp)
 
-    # window slice
+    # window slice (paged: gathered from the row's pages by the store view)
     W = min(nsa.window, S)
     win_start = jnp.clip(jnp.asarray(prefix_len) - W, 0, max(S - W, 0))
-    k_win = jax.lax.dynamic_slice_in_dim(k_cache, win_start, W, axis=1)
-    v_win = jax.lax.dynamic_slice_in_dim(v_cache, win_start, W, axis=1)
+    kv_view = kvstore.KVView(k_cache, v_cache, page_table)
+    k_win, v_win = kv_view.window(win_start, W)
     TW = min(128, max(8, W))
     Wp = -(-W // TW) * TW
     k_win = _pad_axis(k_win, 1, Wp)
@@ -143,13 +184,17 @@ def nsa_verify_fused(q, k_cache, v_cache, k_cmp, v_cmp, k_draft, v_draft,
         cmp_stride=nsa.cmp_stride, window=nsa.window, TC=TC, TW=TW,
         include_cmp=include_cmp, include_sel=include_sel,
         include_win=include_win, combine=combine,
-        has_cmp_in=o_cmp_in is not None, interpret=interpret).items()))
+        has_cmp_in=o_cmp_in is not None, interpret=interpret,
+        paged=paged, blocks_per_page=(ps // lb if paged else 1),
+        max_pages=(page_table.shape[1] if paged else 0)).items()))
     call = _cached_call(key)
 
-    merged_c = jnp.clip(merged, 0, NSB - 1)
-    args = [merged_c, mvalid, own, pos_grp.astype(jnp.int32), s_scalar,
-            q_grp, k_cmp_p, v_cmp_p, k_blkd, v_blkd, k_win, v_win,
-            k_draft_p, v_draft_p, gates_grp, dmask_g]
+    merged_c = jnp.clip(merged, 0, nsb_logical - 1)
+    args = [merged_c, mvalid, own, pos_grp.astype(jnp.int32), s_scalar]
+    if paged:
+        args.append(page_table.astype(jnp.int32))
+    args += [q_grp, k_cmp_p, v_cmp_p, k_blkd, v_blkd, k_win, v_win,
+             k_draft_p, v_draft_p, gates_grp, dmask_g]
     if o_cmp_in is not None:
         oc = o_cmp_in.reshape(B, T, Hkv, Gq, Dh)[:, gi]
         oc = oc.transpose(0, 1, 3, 2, 4, 5).reshape(B, G, Hkv, R, Dh)
@@ -171,7 +216,8 @@ def kernel_launch_count(nsa: NSAConfig, mode: str) -> int:
 def nsa_verify_kernel_layer(params, cfg, x, cache, cmp_cache, prefix_len,
                             positions, tree_mask, sel_idx=None, sel_valid=None,
                             C: int = 2, mode: str = "exact",
-                            reuse: bool = False, interpret: bool = True):
+                            reuse: bool = False, interpret: bool = True,
+                            page_table=None):
     """Full NSA verification of one layer through the Pallas kernels — the
     kernel-backed counterpart of ``models.nsa.nsa_verify_ref``.
 
@@ -181,6 +227,9 @@ def nsa_verify_kernel_layer(params, cfg, x, cache, cmp_cache, prefix_len,
     reuse=True: indices are inherited (``sel_idx`` required) -> single fully
       fused kernel computing all three branches.
 
+    ``cache`` is a raw ``{"k", "v"}`` dict, or the paged store's pool with
+    ``page_table`` supplied (equivalently a ``kvstore.KVView``).
+
     Returns (out (B,T,D), (k_new, v_new), (sel_idx, sel_valid)).
     """
     import numpy as _np
@@ -188,6 +237,10 @@ def nsa_verify_kernel_layer(params, cfg, x, cache, cmp_cache, prefix_len,
     from repro.models import attention as attn_lib
     from repro.models import nsa as nsa_lib
 
+    if isinstance(cache, kvstore.KVView):
+        kv = cache
+    else:
+        kv = kvstore.KVView(cache["k"], cache["v"], page_table)
     nsa = cfg.nsa
     B, T, _ = x.shape
     Hq, Dh = cfg.num_heads, cfg.head_dim
@@ -199,21 +252,21 @@ def nsa_verify_kernel_layer(params, cfg, x, cache, cmp_cache, prefix_len,
     if reuse:
         assert sel_idx is not None, "reuse layers inherit indices"
         out = nsa_verify_fused(
-            q_s, cache["k"], cache["v"], cmp_cache["k_cmp"], cmp_cache["v_cmp"],
+            q_s, kv.k, kv.v, cmp_cache["k_cmp"], cmp_cache["v_cmp"],
             k_new, v_new, sel_idx, sel_valid, positions, prefix_len, ncb_valid,
             tree_mask, g_all, nsa, C=C, mode=mode, include_cmp=True,
-            interpret=interpret)
+            interpret=interpret, page_table=kv.pages)
     else:
         o_cmp, p_slc = nsa_lib.routing(params, cfg, q, cmp_cache["k_cmp"],
                                        cmp_cache["v_cmp"], positions,
-                                       kv_len=cache["k"].shape[1],
+                                       kv_len=kv.max_len,
                                        ncb_valid=ncb_valid)
         sel_idx, sel_valid = nsa_lib.select_topn(p_slc, positions, prefix_len, nsa)
         out = nsa_verify_fused(
-            q_s, cache["k"], cache["v"], cmp_cache["k_cmp"], cmp_cache["v_cmp"],
+            q_s, kv.k, kv.v, cmp_cache["k_cmp"], cmp_cache["v_cmp"],
             k_new, v_new, sel_idx, sel_valid, positions, prefix_len, ncb_valid,
             tree_mask, g_all, nsa, C=C, mode=mode, include_cmp=False,
-            o_cmp_in=o_cmp, interpret=interpret)
+            o_cmp_in=o_cmp, interpret=interpret, page_table=kv.pages)
     out = out.astype(x.dtype).reshape(B, T, Hq * Dh) @ params["wo"]
     return out, (k_new, v_new), (sel_idx, sel_valid)
 

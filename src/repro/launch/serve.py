@@ -43,6 +43,21 @@ def main():
                     help="continuous-mode Poisson arrivals per fused step "
                          "(<=0: all requests arrive at t=0)")
     ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--kv-backend", default="dense", choices=("dense", "paged"),
+                    help="KV-cache store (core/kvstore.py): dense keeps "
+                         "per-slot max_context buffers; paged shares a "
+                         "physical page pool across requests via per-row "
+                         "page tables, so serving memory scales with live "
+                         "tokens — pair with --kv-num-pages to cap the pool")
+    ap.add_argument("--kv-page-size", type=int, default=0,
+                    help="tokens per KV page (0 = the model's nsa.sel_block, "
+                         "which makes selected-block gather a page-table "
+                         "lookup; must be a sel_block multiple)")
+    ap.add_argument("--kv-num-pages", type=int, default=0,
+                    help="physical pages in the shared pool (0 = worst-case "
+                         "slots*max_context/page_size — no memory win; size "
+                         "it to expected live tokens and the scheduler "
+                         "admits on free-page headroom)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--precision-class", default="Strict",
                     choices=list(planner_lib.PRECISION_CLASSES))
@@ -70,7 +85,10 @@ def main():
     serve_cfg = ServeConfig(max_new_tokens=args.tokens,
                             temperature=args.temperature,
                             max_context=min(cfg.max_seq_len, 2048), ssv=ssv,
-                            use_planner=False)
+                            use_planner=False,
+                            kv_backend=args.kv_backend,
+                            kv_page_size=args.kv_page_size,
+                            kv_num_pages=args.kv_num_pages)
 
     corpus = SyntheticCorpus(SyntheticConfig(vocab_size=cfg.vocab_size))
     prompts = [corpus.batch(i, 1, args.prompt_len)[0] for i in range(args.prompts)]

@@ -383,14 +383,24 @@ def attend_verify(params, cfg: ModelConfig, x, cache, prefix_len, positions,
     tree_mask: (B, T, T) bool — draft token i may attend draft token j
     The draft K/V are appended *temporarily* (cache unchanged on return);
     acceptance decides what is committed via ``write_cache``.
+
+    ``cache`` is a raw ``{"k", "v"}`` dict or a ``kvstore.KVView``. Dense
+    attention reads the whole prefix, so a paged view is materialized to its
+    logical (B, S, Hkv, Dh) layout here (page gather; unmapped pages read
+    zeros and are masked by ``prefix_len`` like any garbage past the
+    prefix) — paging pays off in the NSA branches, not this dense baseline.
     """
+    if isinstance(cache, dict):
+        cache_k, cache_v = cache["k"], cache["v"]
+    else:                       # kvstore.KVView (duck-typed: no import cycle)
+        cache_k, cache_v = cache.full()
     B, T, _ = x.shape
     q, k_new, v_new = qkv(params, cfg, x, positions)
     G = cfg.q_per_kv
     qg = q.reshape(B, T, cfg.num_kv_heads, G, cfg.head_dim)
     scale = 1.0 / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
 
-    S_max = cache["k"].shape[1]
+    S_max = cache_k.shape[1]
     kpos = jnp.arange(S_max)[None, None, :]
     prefix_mask = kpos < prefix_len[..., None, None] if hasattr(prefix_len, "ndim") and getattr(prefix_len, "ndim", 0) > 0 \
         else kpos < prefix_len
@@ -399,7 +409,7 @@ def attend_verify(params, cfg: ModelConfig, x, cache, prefix_len, positions,
         prefix_mask &= kpos > positions[..., None] - window
 
     logits_p = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
-                          cache["k"].astype(jnp.float32)) * scale
+                          cache_k.astype(jnp.float32)) * scale
     logits_p = jnp.where(prefix_mask[:, None, None], logits_p, NEG_INF)
     logits_d = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
                           k_new.astype(jnp.float32)) * scale
@@ -412,7 +422,7 @@ def attend_verify(params, cfg: ModelConfig, x, cache, prefix_len, positions,
     logits = jnp.concatenate([logits_p, logits_d], axis=-1)
     probs = jax.nn.softmax(logits, axis=-1)
     pp, pd = probs[..., :S_max], probs[..., S_max:]
-    out = jnp.einsum("bhgqk,bkhd->bqhgd", pp, cache["v"].astype(jnp.float32)) \
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pp, cache_v.astype(jnp.float32)) \
         + jnp.einsum("bhgqk,bkhd->bqhgd", pd, v_new.astype(jnp.float32))
     out = out.astype(x.dtype).reshape(B, T, cfg.num_heads * cfg.head_dim) @ params["wo"]
     return out, (k_new, v_new)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, SSVConfig
+from repro.core import kvstore
 from repro.models import attention, layers, moe as moe_lib, nsa as nsa_lib, recurrent
 
 RECURRENT_KINDS = ("rglru", "mlstm", "slstm")
@@ -213,22 +214,29 @@ def loss_fn(params, cfg: ModelConfig, tokens, frontend=None, remat: bool = True,
 
 
 # ------------------------------------------------------------------ caches
-def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype,
+                     store: Optional[kvstore.KVStoreConfig] = None):
     if kind in RECURRENT_KINDS:
         return {"state": recurrent.STATE_INITS[kind](cfg, batch)}
-    c = {"kv": attention.init_cache(cfg, batch, max_len, dtype)}
+    c = {"kv": kvstore.init_kv(cfg, batch, max_len, dtype,
+                               store or kvstore.DENSE)}
     if cfg.attention == "nsa":
-        c["cmp"] = nsa_lib.init_cmp_cache(cfg, batch, max_len, dtype)
+        c["cmp"] = nsa_lib.init_cmp_cache(cfg, batch, max_len, dtype, store)
     return c
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                store: Optional[kvstore.KVStoreConfig] = None):
+    """Serving caches. Dense (default): raw-KV leaves (B, max_len, Hkv, Dh).
+    Paged store: raw-KV leaves are the shared page pool (P, page_size, Hkv,
+    Dh) — the engine owns the (B, max_pages) page table and threads it in as
+    ``caches["pages"]``; cmp / recurrent leaves stay row-batched."""
     dtype = layers.dtype_of(cfg.dtype)
     caches = []
     for (kinds, n) in segments(cfg):
         stacked = []
         for kind in kinds:
-            one = init_block_cache(cfg, kind, batch, max_len, dtype)
+            one = init_block_cache(cfg, kind, batch, max_len, dtype, store)
             stacked.append(jax.tree.map(
                 lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy() if n > 1 else a[None], one))
         caches.append(tuple(stacked))
@@ -347,21 +355,24 @@ def _reuse_layer_flags(cfg: ModelConfig, ssv: Optional[SSVConfig]):
 
 
 def _mix_verify(bp, cfg: ModelConfig, kind: str, h, cache, prefix_len, positions,
-                tree_mask, parents, carry_idx, reuse_flag, ssv: Optional[SSVConfig]):
+                tree_mask, parents, carry_idx, reuse_flag, ssv: Optional[SSVConfig],
+                pages=None):
     """Sequence-mix a block in verify mode. Returns (mix_out, cache_updates,
-    new_carry_idx)."""
+    new_carry_idx). ``pages`` is the request-shared page table under the
+    paged KV store (None = dense layout)."""
     B, T, _ = h.shape
     if kind in RECURRENT_KINDS:
         step = recurrent.STEPS[kind]
         outs, buf = recurrent.verify_states(step, bp["mix"], cfg, h, parents,
                                             cache["state"])
         return outs, {"state_buf": buf}, carry_idx
+    kv = kvstore.as_view(cache["kv"], pages)
     if cfg.attention == "nsa":
         def fresh(_):
             q, _, _ = attention.qkv(bp["mix"], cfg, h, positions)
             _, p_slc = nsa_lib.routing(bp["mix"], cfg, q, cache["cmp"]["k_cmp"],
                                        cache["cmp"]["v_cmp"], positions,
-                                       kv_len=cache["kv"]["k"].shape[1],
+                                       kv_len=kv.max_len,
                                        ncb_valid=nsa_lib.dyn_num_cmp_blocks(prefix_len, cfg.nsa))
             idx, val = nsa_lib.select_topn(p_slc, positions, prefix_len, cfg.nsa)
             if ssv is not None and ssv.group_mode == "approx" and ssv.group_size > 1:
@@ -375,10 +386,10 @@ def _mix_verify(bp, cfg: ModelConfig, kind: str, h, cache, prefix_len, positions
         carry_idx = jax.lax.cond(reuse_flag, inherit, fresh, carry_idx)
         sel_idx, sel_valid = carry_idx
         out, (k_new, v_new), _ = nsa_lib.nsa_verify_ref(
-            bp["mix"], cfg, h, cache["kv"], cache["cmp"], prefix_len, positions,
+            bp["mix"], cfg, h, kv, cache["cmp"], prefix_len, positions,
             tree_mask, sel_idx=sel_idx, sel_valid=sel_valid)
         return out, {"k_new": k_new, "v_new": v_new}, carry_idx
-    out, (k_new, v_new) = attention.attend_verify(bp["mix"], cfg, h, cache["kv"],
+    out, (k_new, v_new) = attention.attend_verify(bp["mix"], cfg, h, kv,
                                                   prefix_len, positions, tree_mask,
                                                   window=_attn_window(cfg))
     return out, {"k_new": k_new, "v_new": v_new}, carry_idx
@@ -423,7 +434,7 @@ def verify_step(params, cfg: ModelConfig, caches, draft_tokens, positions, tree_
                 hn = layers.rmsnorm(gp[j]["norm1"], h, cfg.norm_eps)
                 mix, up, cidx = _mix_verify(gp[j], cfg, kind, hn, gcache[j], prefix_len,
                                             positions, tree_mask, parents, cidx,
-                                            gflags[j], ssv)
+                                            gflags[j], ssv, pages=caches.get("pages"))
                 h = h + mix
                 hn = layers.rmsnorm(gp[j]["norm2"], h, cfg.norm_eps)
                 y, _ = _apply_ffn(gp[j], cfg, kind, hn)
@@ -440,9 +451,14 @@ def verify_step(params, cfg: ModelConfig, caches, draft_tokens, positions, tree_
 
 
 def _max_len_of(caches):
+    pages = caches.get("pages")
     for seg in caches["segments"]:
         for c in seg:
             if "kv" in c:
+                if pages is not None:
+                    # stacked pool: (n, P, page_size, Hkv, Dh); logical
+                    # capacity = pages per row x page size
+                    return pages.shape[1] * c["kv"]["k"].shape[2]
                 return c["kv"]["k"].shape[2]  # stacked: (n, B, S, Hkv, Dh)
     return 0
 
@@ -472,7 +488,17 @@ def commit(params, cfg: ModelConfig, caches, seg_updates, accepted, n_accepted):
     by `length` downstream. A row with n_accepted == 0 is a no-op commit
     (length frozen, recurrent state preserved) — batched serving uses this to
     freeze finished requests while the rest of the batch keeps stepping.
+
+    Paged caches (``"pages"`` present) route through the prepare/apply pair
+    below: accepted K/V scatter into the shared page pool through the page
+    table instead of a dense slice write.
     """
+    if "pages" in caches:
+        prep, new_len = commit_paged_prepare(params, cfg, caches, seg_updates,
+                                             accepted, n_accepted)
+        segs = commit_apply_paged(caches["segments"], prep, caches["pages"],
+                                  caches["length"], n_accepted)
+        return {"segments": segs, "length": new_len, "pages": caches["pages"]}
     old_len = caches["length"]
     B, T_acc = accepted.shape
     # NOTE: batched serving commits per-row lengths; the engine uses B==1 per
@@ -487,35 +513,11 @@ def commit(params, cfg: ModelConfig, caches, seg_updates, accepted, n_accepted):
             cache_j = seg_caches[j]
             up_j = updates[j]
             if kind in RECURRENT_KINDS:
-                buf = up_j["state_buf"]  # leaves: (n, T+1, B, ...)
-                last = accepted[:, -1]   # (B,) node index of deepest accepted
-
-                def pick(b):
-                    # b: (n, T+1, B, ...) -> (n, B, ...) at node last+1 per batch row
-                    idx = jnp.clip(last + 1, 0, b.shape[1] - 1)          # (B,)
-                    idxe = idx.reshape((1, 1, B) + (1,) * (b.ndim - 3))
-                    g = jnp.take_along_axis(
-                        b, jnp.broadcast_to(idxe, (b.shape[0], 1, B) + b.shape[3:]), axis=1)
-                    return g[:, 0]
-
-                new_state = jax.tree.map(pick, buf)
-                orig = cache_j["state"]
-                live = n_accepted > 0                                # (B,)
-
-                def keep(ns, o):
-                    m = live.reshape((1, B) + (1,) * (ns.ndim - 2))
-                    return jnp.where(m, ns.astype(o.dtype), o)
-
-                new_state = jax.tree.map(keep, new_state, orig)
-                new_stack.append({"state": new_state})
+                new_stack.append({"state": _pick_recurrent(cache_j, up_j,
+                                                           accepted, n_accepted)})
                 continue
             # attention: gather accepted K/V along the draft axis and append
-            k_new, v_new = up_j["k_new"], up_j["v_new"]  # (n, B, T, Hkv, Dh)
-            gi = accepted[None, :, :, None, None]
-            k_acc = jnp.take_along_axis(k_new, jnp.broadcast_to(
-                gi, (k_new.shape[0], B, T_acc) + k_new.shape[3:]), axis=2)
-            v_acc = jnp.take_along_axis(v_new, jnp.broadcast_to(
-                gi, (v_new.shape[0], B, T_acc) + v_new.shape[3:]), axis=2)
+            k_acc, v_acc = _gather_accepted(up_j, accepted)
             kv = cache_j["kv"]
             k_cache = jax.vmap(lambda c, kn: jax.lax.dynamic_update_slice_in_dim(
                 c, kn.astype(c.dtype), old_len, axis=1))(kv["k"], k_acc)
@@ -530,3 +532,119 @@ def commit(params, cfg: ModelConfig, caches, seg_updates, accepted, n_accepted):
             new_stack.append(new_c)
         new_segs.append(tuple(new_stack))
     return {"segments": new_segs, "length": new_len}
+
+
+def _gather_accepted(up_j, accepted):
+    """Pick the accepted root-to-leaf path's K/V out of a layer's draft
+    updates: (n, B, T, Hkv, Dh) -> (n, B, T_acc, Hkv, Dh)."""
+    B, T_acc = accepted.shape
+    k_new, v_new = up_j["k_new"], up_j["v_new"]
+    gi = accepted[None, :, :, None, None]
+    k_acc = jnp.take_along_axis(k_new, jnp.broadcast_to(
+        gi, (k_new.shape[0], B, T_acc) + k_new.shape[3:]), axis=2)
+    v_acc = jnp.take_along_axis(v_new, jnp.broadcast_to(
+        gi, (v_new.shape[0], B, T_acc) + v_new.shape[3:]), axis=2)
+    return k_acc, v_acc
+
+
+def _pick_recurrent(cache_j, up_j, accepted, n_accepted):
+    """Accepted-state selection for a recurrent layer (shared by the dense
+    and paged commits): take the state after the deepest accepted node, keep
+    the old state for rows with nothing accepted."""
+    B = accepted.shape[0]
+    buf = up_j["state_buf"]          # leaves: (n, T+1, B, ...)
+    last = accepted[:, -1]           # (B,)
+
+    def pick(b):
+        idx = jnp.clip(last + 1, 0, b.shape[1] - 1)
+        idxe = idx.reshape((1, 1, B) + (1,) * (b.ndim - 3))
+        g = jnp.take_along_axis(
+            b, jnp.broadcast_to(idxe, (b.shape[0], 1, B) + b.shape[3:]), axis=1)
+        return g[:, 0]
+
+    new_state = jax.tree.map(pick, buf)
+    live = n_accepted > 0
+
+    def keep(ns, o):
+        m = live.reshape((1, B) + (1,) * (ns.ndim - 2))
+        return jnp.where(m, ns.astype(o.dtype), o)
+
+    return jax.tree.map(keep, new_state, cache_j["state"])
+
+
+def commit_paged_prepare(params, cfg: ModelConfig, caches, seg_updates,
+                         accepted, n_accepted):
+    """Everything in a paged commit EXCEPT the page-pool writes.
+
+    Per attention layer: the accepted K/V path (``{"acc": {"k", "v"}}``,
+    (n, B, T_acc, Hkv, Dh)) plus the updated compression cache — computed
+    against the *pre-write* pool with the accepted tokens overlaid, so it
+    never depends on write ordering. Per recurrent layer: the selected
+    state. Splitting prepare from apply lets the batched step run prepare
+    inside its per-row vmap (pools are read-only there) and issue the shared
+    -pool scatters once, at batch level, where rows cannot alias.
+    Returns (prep segments, new_len)."""
+    old_len = caches["length"]
+    B, T_acc = accepted.shape
+    new_len = old_len + n_accepted[0]
+    max_new_cmp = (T_acc // cfg.nsa.cmp_stride) + 2
+    pages = caches["pages"]
+    prep = []
+    for (kinds, ngroups), stacked, seg_caches, updates in zip(
+            segments(cfg), params["segments"], caches["segments"], seg_updates):
+        group = []
+        for j, kind in enumerate(kinds):
+            cache_j = seg_caches[j]
+            up_j = updates[j]
+            if kind in RECURRENT_KINDS:
+                group.append({"state": _pick_recurrent(cache_j, up_j,
+                                                       accepted, n_accepted)})
+                continue
+            k_acc, v_acc = _gather_accepted(up_j, accepted)
+            entry = {"acc": {"k": k_acc, "v": v_acc}}
+            if "cmp" in cache_j:
+                def upd(p, pk, pv, cmpc, ka, va):
+                    view = kvstore.KVView(pk, pv, pages)
+                    return nsa_lib.update_cmp_cache_dyn(
+                        p, view, cmpc, old_len, new_len, max_new_cmp, cfg.nsa,
+                        overlay=(ka, va))
+                entry["cmp"] = jax.vmap(upd)(
+                    stacked[j]["mix"], cache_j["kv"]["k"], cache_j["kv"]["v"],
+                    cache_j["cmp"], k_acc, v_acc)
+            group.append(entry)
+        prep.append(tuple(group))
+    return prep, new_len
+
+
+def commit_apply_paged(segs, prep, pages, old_len, n_accepted):
+    """Apply a prepared paged commit to the cache segments: scatter each
+    layer's accepted K/V into the shared page pool through the page table
+    (rows with ``n_accepted == 0`` — finished slots whose pages may already
+    belong to a new request — are dropped, not clamped) and swap in the
+    prepared cmp / recurrent leaves.
+
+    Works for the single-request caches (prep leaves (n, B, T_acc, ...),
+    ``old_len`` scalar) and for the batched engine (prep leaves stacked to
+    (n, R, T_acc, ...), ``old_len``/``n_accepted`` shaped (R,))."""
+    mask = n_accepted > 0
+    new_segs = []
+    for seg_prep, seg_caches in zip(prep, segs):
+        group = []
+        for cp, cc in zip(seg_prep, seg_caches):
+            if "state" in cp:
+                group.append({"state": cp["state"]})
+                continue
+            kv = cc["kv"]
+
+            def write_one(pk, pv, ka, va):
+                view = kvstore.KVView(pk, pv, pages)
+                return view.write(ka, va, old_len, row_mask=mask)
+
+            k_pool, v_pool = jax.vmap(write_one)(kv["k"], kv["v"],
+                                                 cp["acc"]["k"], cp["acc"]["v"])
+            new_c = {"kv": {"k": k_pool, "v": v_pool}}
+            if "cmp" in cp:
+                new_c["cmp"] = cp["cmp"]
+            group.append(new_c)
+        new_segs.append(tuple(group))
+    return new_segs

@@ -33,8 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, NSAConfig
+from repro.core import kvstore
 from repro.models import layers
-from repro.models.attention import NEG_INF, attn_init, qkv, write_cache
+from repro.models.attention import NEG_INF, attn_init, qkv
 
 
 # ---------------------------------------------------------------- init
@@ -129,21 +130,44 @@ def update_cmp_cache(params, cache, cmp_cache, old_len, new_len, nsa: NSAConfig)
 
 
 def update_cmp_cache_dyn(params, cache, cmp_cache, old_len, new_len, max_new: int,
-                         nsa: NSAConfig):
+                         nsa: NSAConfig, overlay=None):
     """Traced-length incremental compression update for the jitted engine.
 
     old_len/new_len are traced int32; at most ``max_new`` blocks can complete
     per commit (static bound: ceil((gamma+1)/stride)+1). Candidate blocks are
     computed unconditionally and masked into the cache.
+
+    ``cache`` is a raw ``{"k", "v"}`` dict (dense) or a ``kvstore.KVView``
+    over either backend. ``overlay`` = (k_acc, v_acc) of shape
+    (B, T_acc, Hkv, Dh) supplies the tokens committed at ``old_len`` this
+    step *before* they land in the store — the paged batched commit reads
+    the fresh region from the accept buffer instead of ordering a pool
+    write ahead of the compression update.
     """
+    kv = kvstore.as_view(cache)
     ncb_old = dyn_num_cmp_blocks(old_len, nsa)
     ncb_new = dyn_num_cmp_blocks(new_len, nsa)
-    B = cache["k"].shape[0]
-    S = cache["k"].shape[1]
+    B = kv.batch
+    S = kv.max_len
     starts = (ncb_old + jnp.arange(max_new)) * nsa.cmp_stride          # (max_new,)
     idx = jnp.clip(starts[:, None] + jnp.arange(nsa.cmp_block)[None, :], 0, S - 1)
-    kb = jnp.take(cache["k"], idx, axis=1)                             # (B,max_new,l,H,Dh)
-    vb = jnp.take(cache["v"], idx, axis=1)
+    kb, vb = kv.gather_tokens(jnp.broadcast_to(idx[None], (B,) + idx.shape))
+    if overlay is not None:
+        k_acc, v_acc = overlay                                         # (B,T_acc,H,Dh)
+        T_acc = k_acc.shape[1]
+        rel = jnp.clip(idx[None] - old_len, 0, T_acc - 1)              # (B?,max_new,l)
+        rel = jnp.broadcast_to(rel, (B,) + idx.shape).reshape(B, -1)
+        fresh = (idx[None] >= old_len) & (idx[None] < old_len + T_acc)
+        fresh = jnp.broadcast_to(fresh, (B,) + idx.shape)[..., None, None]
+        ko = jnp.take_along_axis(k_acc, rel[..., None, None], axis=1
+                                 ).reshape(kb.shape)
+        vo = jnp.take_along_axis(v_acc, rel[..., None, None], axis=1
+                                 ).reshape(vb.shape)
+        # cast to the store dtype first: the dense path reads these tokens
+        # back from the cache after the write (post-rounding), and backend
+        # token-equality requires bit-matching compression inputs
+        kb = jnp.where(fresh, ko.astype(kb.dtype), kb)
+        vb = jnp.where(fresh, vo.astype(vb.dtype), vb)
     wk = jax.nn.softmax(params["phi_k"]).astype(jnp.float32)
     wv = jax.nn.softmax(params["phi_v"]).astype(jnp.float32)
     k_new = (jnp.einsum("bnlhd,l->bnhd", kb.astype(jnp.float32), wk)
@@ -162,7 +186,15 @@ def update_cmp_cache_dyn(params, cache, cmp_cache, old_len, new_len, max_new: in
             "v_cmp": v_cmp.astype(cmp_cache["v_cmp"].dtype)}
 
 
-def init_cmp_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+def init_cmp_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32,
+                   store=None):
+    """Compressed-KV cache. Under the paged store the compressed blocks stay
+    row-dense on purpose: they are ``cmp_stride``x smaller than raw KV (the
+    dominant term paging targets) and the routing launch reads them densely
+    every step — paging them would turn one contiguous read into a gather
+    for <7% of the KV footprint. ``store`` is accepted so call sites thread
+    one handle; only the raw-KV layout changes with the backend."""
+    del store
     ncb = num_cmp_blocks(max_len, cfg.nsa)
     # pad the block axis to a shardable multiple (512 covers the multi-pod
     # sequence-sharded layout); padded blocks are invisible to every query
@@ -337,20 +369,19 @@ def dyn_num_cmp_blocks(P, nsa: NSAConfig):
 
 
 # ---------------------------------------------------------------- verify (ref)
-def gather_blocks(cache_k, cache_v, idx, sel_block: int):
-    """Gather selected blocks per (batch, query, kv-head).
+def gather_blocks(kv, idx, sel_block: int):
+    """Gather selected blocks per (batch, query, kv-head) through the KV
+    store: ``kv`` is a ``kvstore.KVView`` (dense or paged) or a raw
+    ``{"k", "v"}`` dict. idx: (B, T, Hkv, n) block indices. Returns k_sel,
+    v_sel: (B, T, Hkv, n, l', Dh).
 
-    cache_k/v: (B, S, Hkv, Dh); idx: (B, T, Hkv, n) block indices.
-    Returns k_sel, v_sel: (B, T, Hkv, n, l', Dh).
+    Out-of-range, negative, or (paged) unmapped block indices read an
+    explicit zero page — never a silently clamped neighbor block. Callers
+    additionally mask such positions out of the softmax (``nsa_verify_ref``
+    adds ``tok_pos >= 0`` to the selection mask), so an adversarial index
+    can neither read foreign KV nor shift attention mass.
     """
-    B, S, Hkv, Dh = cache_k.shape
-    tok = idx[..., None] * sel_block + jnp.arange(sel_block)[None, None, None, None, :]
-    tok = jnp.clip(tok, 0, S - 1)                                    # (B,T,Hkv,n,l')
-    bidx = jnp.arange(B).reshape(B, 1, 1, 1, 1)
-    hidx = jnp.arange(Hkv).reshape(1, 1, Hkv, 1, 1)
-    k_sel = cache_k[bidx, tok, hidx]                                  # (B,T,Hkv,n,l',Dh)
-    v_sel = cache_v[bidx, tok, hidx]
-    return k_sel, v_sel
+    return kvstore.as_view(kv).gather_blocks(idx, sel_block)
 
 
 def nsa_verify_ref(params, cfg: ModelConfig, x, cache, cmp_cache, prefix_len,
@@ -366,10 +397,15 @@ def nsa_verify_ref(params, cfg: ModelConfig, x, cache, cmp_cache, prefix_len,
     cmp/slc branches attend the committed prefix only; the win branch covers
     the trailing window of the prefix plus tree-masked draft tokens —
     mirroring the paper's kernel semantics (sliding window stays exact).
+
+    ``cache`` is the KV store handle: a ``kvstore.KVView`` (dense or paged —
+    the slc gather and the win slice resolve through the page table when
+    paged) or a raw ``{"k", "v"}`` dict (seed call sites).
     """
     nsa = cfg.nsa
     B, T, _ = x.shape
     Hq, Hkv, G, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.q_per_kv, cfg.head_dim
+    kv = kvstore.as_view(cache)
     q, k_new, v_new = qkv(params, cfg, x, positions)
     scale = 1.0 / np.sqrt(Dh)
     ncb_valid = dyn_num_cmp_blocks(prefix_len, nsa)
@@ -379,19 +415,21 @@ def nsa_verify_ref(params, cfg: ModelConfig, x, cache, cmp_cache, prefix_len,
     # prefix_len may be a traced scalar in the jitted serve path)
     k_cmp, v_cmp = cmp_cache["k_cmp"], cmp_cache["v_cmp"]
     o_cmp, p_slc = routing(params, cfg, q, k_cmp, v_cmp, positions,
-                           kv_len=cache["k"].shape[1], ncb_valid=ncb_valid)
+                           kv_len=kv.max_len, ncb_valid=ncb_valid)
     if sel_idx is None:
         sel_idx, sel_valid = select_topn(p_slc, positions, prefix_len, nsa)
 
     # ---- slc branch: gather + per-token causal/prefix mask
-    k_sel, v_sel = gather_blocks(cache["k"], cache["v"], sel_idx, nsa.sel_block)
+    k_sel, v_sel = gather_blocks(kv, sel_idx, nsa.sel_block)
     n = sel_idx.shape[-1]
     tok_pos = sel_idx[..., None] * nsa.sel_block + jnp.arange(nsa.sel_block)  # (B,T,Hkv,n,l')
     qg = q.reshape(B, T, Hkv, G, Dh)
     logit_sel = jnp.einsum("bthgd,bthnld->bthgnl", qg.astype(jnp.float32),
                            k_sel.astype(jnp.float32)) * scale
-    m_sel = (tok_pos < prefix_len) & (tok_pos <= positions[:, :, None, None, None]) & \
-        sel_valid[..., None]
+    # tok_pos >= 0 guards adversarial negative block indices (which would
+    # otherwise pass the prefix/causal checks against a zero-filled gather)
+    m_sel = (tok_pos >= 0) & (tok_pos < prefix_len) & \
+        (tok_pos <= positions[:, :, None, None, None]) & sel_valid[..., None]
     logit_sel = jnp.where(m_sel[:, :, :, None], logit_sel, NEG_INF)
     flat = logit_sel.reshape(B, T, Hkv, G, n * nsa.sel_block)
     p_sel = jax.nn.softmax(flat, axis=-1)
@@ -402,11 +440,10 @@ def nsa_verify_ref(params, cfg: ModelConfig, x, cache, cmp_cache, prefix_len,
 
     # ---- win branch: trailing-window *slice* of the prefix (keeps decode
     # sub-quadratic at 500K context) + tree-masked draft tokens
-    S_max = cache["k"].shape[1]
+    S_max = kv.max_len
     W = min(nsa.window, S_max)
     win_start = jnp.clip(jnp.asarray(prefix_len) - W, 0, max(S_max - W, 0))
-    k_win = jax.lax.dynamic_slice_in_dim(cache["k"], win_start, W, axis=1)
-    v_win = jax.lax.dynamic_slice_in_dim(cache["v"], win_start, W, axis=1)
+    k_win, v_win = kv.window(win_start, W)
     kpos = jnp.broadcast_to((win_start + jnp.arange(W)).reshape(1, 1, W), (B, T, W))
     pmask = (kpos < jnp.asarray(prefix_len)) & \
         (kpos > positions[..., None] - nsa.window) & (kpos <= positions[..., None])
@@ -435,12 +472,19 @@ def nsa_verify_ref(params, cfg: ModelConfig, x, cache, cmp_cache, prefix_len,
 
 def nsa_decode_ref(params, cfg: ModelConfig, x, cache, cmp_cache, length: int):
     """Single-token autoregressive NSA decode (the paper's 49-tok/s baseline
-    shape). Thin wrapper: verify with T=1 and a trivial tree mask, then the
-    caller commits k/v via write_cache + update_cmp_cache."""
+    shape). Thin wrapper: verify with T=1 and a trivial tree mask, then
+    commit k/v through the store handle (dense write or page-table scatter);
+    the caller updates the compression cache via update_cmp_cache.
+
+    ``cache`` may be a raw ``{"k", "v"}`` dict or a ``kvstore.KVView``; the
+    updated store comes back in the same form."""
     B = x.shape[0]
     positions = jnp.full((B, 1), length, jnp.int32)
     tree_mask = jnp.ones((B, 1, 1), bool)
     out, (k_new, v_new), _ = nsa_verify_ref(params, cfg, x, cache, cmp_cache,
                                             length, positions, tree_mask)
-    cache = write_cache(cache, k_new, v_new, length)
-    return out, cache
+    kv = kvstore.as_view(cache)
+    k, v = kv.write(k_new, v_new, length)
+    if isinstance(cache, kvstore.KVView):
+        return out, kvstore.KVView(k, v, kv.pages)
+    return out, {"k": k, "v": v}

@@ -31,13 +31,25 @@ def test_e2e_quick_emits_continuous_serving_row():
     cont = report["continuous"]
     for key in ("drain_tok_s", "continuous_tok_s", "speedup_vs_drain",
                 "mean_occupancy", "mean_queue_delay_steps",
-                "continuous_fused_steps", "drain_fused_steps"):
+                "continuous_fused_steps", "drain_fused_steps",
+                "peak_kv_bytes"):
         assert key in cont, f"continuous serving row missing {key!r}"
     assert 0.0 < cont["mean_occupancy"] <= 1.0
     assert cont["mean_queue_delay_steps"] >= 0.0
     assert cont["continuous_tok_s"] > 0.0 and cont["drain_tok_s"] > 0.0
     # mid-flight admission never does MORE fused steps than drain-then-refill
     assert cont["continuous_fused_steps"] <= cont["drain_fused_steps"]
+    # paged-vs-dense KV store row: lower peak KV bytes on the low-occupancy
+    # workload, token-equal backends (the benchmark itself asserts equality)
+    kv = report["kv_store"]
+    for key in ("dense_peak_kv_bytes", "paged_peak_kv_bytes",
+                "kv_bytes_ratio", "dense_tok_s", "paged_tok_s",
+                "throughput_ratio", "mean_page_occupancy", "token_equal"):
+        assert key in kv, f"kv_store row missing {key!r}"
+    assert kv["token_equal"] is True
+    assert kv["paged_peak_kv_bytes"] < kv["dense_peak_kv_bytes"]
+    assert 0.0 < kv["kv_bytes_ratio"] < 1.0
+    assert 0.0 <= kv["mean_page_occupancy"] <= 1.0
 
 
 def test_runner_cli_quick_only_refinement(capsys):
@@ -46,3 +58,20 @@ def test_runner_cli_quick_only_refinement(capsys):
     bench_run.main(["--quick", "--only", "refinement"])
     out = capsys.readouterr().out
     assert "refinement" in out and "done" in out
+
+
+def test_runner_cli_only_accepts_comma_separated_list(capsys):
+    """--only roofline,refinement runs BOTH suites (regression: the runner
+    used to treat the whole string as one suite name and reject it)."""
+    bench_run.main(["--quick", "--only", "roofline,refinement"])
+    out = capsys.readouterr().out
+    assert "# roofline done" in out and "# refinement done" in out
+
+
+def test_runner_cli_only_unknown_name_lists_valid_suites(capsys):
+    with pytest.raises(SystemExit):
+        bench_run.main(["--quick", "--only", "e2e,nope"])
+    err = capsys.readouterr().err
+    assert "'nope'" in err
+    for name, _ in bench_run.SUITES:
+        assert name in err

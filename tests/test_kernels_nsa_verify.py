@@ -82,6 +82,60 @@ def test_kernel_dtypes(dtype, tol):
                                np.asarray(out_r, np.float32), rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("C,mode", [(1, "exact"), (2, "exact"), (2, "approx")])
+@pytest.mark.parametrize("page_mult", [1, 2])
+def test_fused_paged_matches_dense(C, mode, page_mult):
+    """Paged-store execution of the fused kernel: the dense cache re-homed
+    into a shuffled page pool (page_size = page_mult * sel_block) with the
+    page table resolving selected blocks must reproduce the dense fused
+    output exactly — including merged entries pointing at unmapped logical
+    pages, which are masked, not clamped."""
+    rng = np.random.default_rng(11 + page_mult)
+    B, T, Hq, Hkv, Dh, S, prefix = 2, 6, 4, 2, 32, 128, 100
+    inp = make_inputs(rng, B, T, Hq, Hkv, Dh, S, prefix)
+    (q, kc, vc, kcmp, vcmp, kd, vd, sel_idx, sel_valid, positions, pl, nv,
+     tm, gates) = inp
+    out_dense = ops.nsa_verify_fused(q, kc, vc, kcmp, vcmp, kd, vd, sel_idx,
+                                     sel_valid, positions, pl, nv, tm, gates,
+                                     NSA, C=C, mode=mode)
+    # re-home the dense cache into a shuffled pool
+    ps = NSA.sel_block * page_mult
+    mp = S // ps
+    P = B * mp + 3
+    order = np.random.default_rng(5).permutation(P)[: B * mp]
+    pages = jnp.asarray(order.reshape(B, mp).astype(np.int32))
+    poolk = jnp.zeros((P, ps, Hkv, Dh))
+    poolv = jnp.zeros((P, ps, Hkv, Dh))
+    for b in range(B):
+        poolk = poolk.at[order.reshape(B, mp)[b]].set(
+            np.asarray(kc[b]).reshape(mp, ps, Hkv, Dh))
+        poolv = poolv.at[order.reshape(B, mp)[b]].set(
+            np.asarray(vc[b]).reshape(mp, ps, Hkv, Dh))
+    out_paged = ops.nsa_verify_fused(q, poolk, poolv, kcmp, vcmp, kd, vd,
+                                     sel_idx, sel_valid, positions, pl, nv,
+                                     tm, gates, NSA, C=C, mode=mode,
+                                     page_table=pages)
+    np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_dense),
+                               rtol=2e-5, atol=2e-6)
+    # an unmapped page (hole at logical page 0 — inside the prefix, outside
+    # the trailing window) masks its selection blocks out exactly like
+    # sel_valid=False would on the dense layout: masked, never clamped
+    holey = pages.at[:, 0].set(-1)
+    bpp = ps // NSA.sel_block
+    safe = jnp.clip(sel_idx, bpp, None)          # keep other slots off page 0
+    hostile = safe.at[..., 0].set(0)             # block 0 lives in the hole
+    out_holey = ops.nsa_verify_fused(q, poolk, poolv, kcmp, vcmp, kd, vd,
+                                     hostile, sel_valid, positions, pl, nv,
+                                     tm, gates, NSA, C=C, mode=mode,
+                                     page_table=holey)
+    out_masked = ops.nsa_verify_fused(q, kc, vc, kcmp, vcmp, kd, vd, hostile,
+                                      sel_valid.at[..., 0].set(False),
+                                      positions, pl, nv, tm, gates, NSA,
+                                      C=C, mode=mode)
+    np.testing.assert_allclose(np.asarray(out_holey), np.asarray(out_masked),
+                               rtol=2e-5, atol=2e-6)
+
+
 @pytest.fixture(scope="module")
 def nsa_model():
     cfg = ModelConfig(name="t", num_layers=1, d_model=64, num_heads=4,
