@@ -2,6 +2,7 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run                   # everything
+  PYTHONPATH=src python -m benchmarks.run --list            # valid suite names
   PYTHONPATH=src python -m benchmarks.run --only e2e        # one suite
   PYTHONPATH=src python -m benchmarks.run --only e2e,kernel # several suites
   PYTHONPATH=src python -m benchmarks.run --quick           # CPU-sized shapes,
@@ -41,7 +42,13 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="tiny shapes/token counts so every suite finishes in "
                          "seconds — the tier-1 smoke-test mode")
+    ap.add_argument("--list", action="store_true",
+                    help="print the valid suite names (one per line) and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        for name, _ in SUITES:
+            print(name)
+        return
     only = None
     if args.only:
         only = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -24,12 +24,22 @@ making selected-block gather a page-table lookup) and `--kv-num-pages`
 (pool capacity; 0 = worst case, no memory win) tune it. Token streams are
 byte-identical to the dense backend (tests/test_engine_paged.py).
 
+`--bucketed` (continuous mode) serves a mixed-length demo workload through
+bucket-local execution groups: a `BatchPlanner` partitions the live slots
+by context-regime bucket and each group runs one fused step under the
+profile's strategy for that bucket, instead of the whole batch sharing one
+tree topology. The scheduler admits bucket-homogeneously into freed slots.
+`--warmup` AOT-compiles every reachable (strategy, group size) fused step
+before serving, so mid-serve strategy switches never stall on a retrace.
+
   PYTHONPATH=src python examples/serve_batched.py --requests 4
   PYTHONPATH=src python examples/serve_batched.py --requests 4 --sequential
   PYTHONPATH=src python examples/serve_batched.py --requests 8 --continuous \\
       --slots 4 --arrival-rate 0.5
   PYTHONPATH=src python examples/serve_batched.py --requests 8 --continuous \\
       --slots 4 --kv-backend paged --kv-num-pages 48
+  PYTHONPATH=src python examples/serve_batched.py --requests 8 --continuous \\
+      --slots 4 --bucketed --warmup
 """
 import argparse
 import time
@@ -72,6 +82,26 @@ def build_profile(cfg, precision_class):
                             for pc in P.PRECISION_CLASSES}), entries
 
 
+def build_bucketed_profile(cfg, precision_class):
+    """CPU-scale bucketed profile for the mixed-length demo: short-context
+    requests get a shallow tree, long-context requests a deep one (per-
+    bucket ranked lists, so the per-bucket runtime guards can refine)."""
+    mode, reuse = P.class_constraints(precision_class)
+    sched = P.default_schedule(cfg.num_layers) if reuse else ()
+    C = 4 if mode == "approx" else 2
+    mk = lambda D, k: SSVConfig(
+        tree_depth=D, tree_width=k, traversal="bfs", group_size=C,
+        group_mode=mode, refresh_schedule=sched,
+        precision_class=precision_class)
+    buckets = ((0, 64), (64, 256), (256, 1024), (1024, 4096))
+    ranked = {0: [(1, 2), (2, 2)], 1: [(2, 2), (3, 2)],
+              2: [(3, 2), (4, 2)], 3: [(4, 2), (4, 2)]}
+    table = {(b, pc): [P.ProfileEntry(mk(D, k), 2.0 - 0.2 * i, 0.05)
+                       for i, (D, k) in enumerate(ranked[b])]
+             for b in range(len(buckets)) for pc in P.PRECISION_CLASSES}
+    return P.Profile(table=table, buckets=buckets)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=4)
@@ -98,13 +128,33 @@ def main():
                     help="tokens per page (0 = model nsa.sel_block)")
     ap.add_argument("--kv-num-pages", type=int, default=0,
                     help="physical page-pool capacity (0 = worst case)")
+    ap.add_argument("--bucketed", action="store_true",
+                    help="continuous mode only: bucket-local execution "
+                         "groups — each context-regime bucket of the batch "
+                         "steps under its own profile strategy (serves a "
+                         "mixed-length demo workload)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile every reachable (strategy, group "
+                         "size) fused step before serving (bucketed only)")
     args = ap.parse_args()
+    if args.bucketed and not args.continuous:
+        ap.error("--bucketed groups the continuous batch; add --continuous")
+    if args.warmup and not args.bucketed:
+        ap.error("--warmup pre-compiles the bucketed group-step cache; "
+                 "add --bucketed")
 
     tp, cfg, dp, dcfg = build_models()
     profile, entries = build_profile(cfg, args.precision_class)
     corpus = SyntheticCorpus(SyntheticConfig(vocab_size=cfg.vocab_size))
-    queue = [corpus.batch(i, 1, 48 + 16 * (i % 3))[0]
-             for i in range(args.requests)]
+    if args.bucketed:
+        # mixed-length demo workload: alternate short- and long-context
+        # prompts so the batch spans several profile buckets
+        lengths = [24, 48, 96, 160]
+        queue = [corpus.batch(i, 1, lengths[i % len(lengths)])[0]
+                 for i in range(args.requests)]
+    else:
+        queue = [corpus.batch(i, 1, 48 + 16 * (i % 3))[0]
+                 for i in range(args.requests)]
     serve_cfg = ServeConfig(max_new_tokens=args.tokens, temperature=0.0,
                             max_context=1024, ssv=entries[0].strategy,
                             use_planner=True,
@@ -114,7 +164,11 @@ def main():
 
     t0 = time.time()
     if args.continuous:
-        planner = P.RuntimePlanner(profile, args.precision_class)
+        if args.bucketed:
+            planner = P.BatchPlanner(build_bucketed_profile(
+                cfg, args.precision_class), args.precision_class)
+        else:
+            planner = P.RuntimePlanner(profile, args.precision_class)
         eng = engine_lib.BatchedSSVEngine(tp, cfg, dp, dcfg, serve_cfg,
                                           planner=planner)
         arrivals = schedule_lib.poisson_arrivals(
@@ -123,7 +177,8 @@ def main():
                                      arrival=float(arrivals[i]))
                 for i in range(args.requests)]
         res = eng.serve_continuous(reqs, num_slots=args.slots,
-                                   max_new_tokens=args.tokens)
+                                   max_new_tokens=args.tokens,
+                                   warmup=args.warmup)
         total_tokens = res.total_tokens
         for req, gen in zip(res.requests, res.results):
             delay = (f"{req.queue_delay:.1f}" if req.queue_delay is not None
@@ -134,6 +189,16 @@ def main():
         print(f"continuous: {res.steps} fused steps over {args.slots} slots, "
               f"mean occupancy {res.mean_occupancy:.2f}, "
               f"mean queue delay {res.mean_queue_delay_steps:.1f} steps")
+        if args.bucketed:
+            occ = ", ".join(f"bucket{b}={v:.2f}"
+                            for b, v in sorted(res.bucket_occupancy.items()))
+            cache = res.kernel_cache
+            print(f"bucketed: {res.group_launches} group launches "
+                  f"({occ}); step cache "
+                  f"{cache['step_cache_hits']} hits / "
+                  f"{cache['step_cache_misses']} misses; kernel build cache "
+                  f"{cache['verify_call_hits']} hits / "
+                  f"{cache['verify_call_misses']} misses")
         if args.kv_backend == "paged":
             print(f"paged KV store: {res.kv_bytes} raw-KV bytes, page "
                   f"occupancy mean {res.mean_page_occupancy:.2f} / peak "

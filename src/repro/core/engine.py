@@ -43,6 +43,7 @@ from repro.config import ModelConfig, ServeConfig, SSVConfig
 from repro.core import accept as accept_lib
 from repro.core import draft as draft_lib
 from repro.core import kvstore
+from repro.core import overlap as overlap_lib
 from repro.core import schedule as schedule_lib
 from repro.core.tree import build_topology, children_matrix
 from repro.models import model
@@ -178,6 +179,21 @@ def request_pages(serve_cfg: ServeConfig, planner, page_size: int,
     return min(kvstore.pages_needed(toks, page_size), max_pages)
 
 
+def kernel_cache_stats() -> Dict[str, int]:
+    """Process-wide kernel-layer cache counters, reported in engine metrics
+    next to ``kv_cache_bytes``: the fused-verify kernel build cache
+    (``kernels/nsa_verify/ops._cached_call``) and the (T, C) query-group
+    layout cache (``overlap.group_queries``). Both caches are shared by
+    every engine in the process."""
+    from repro.kernels.nsa_verify import ops as nsa_ops
+    vc = nsa_ops.verify_call_cache_info()
+    gq = overlap_lib.group_queries.cache_info()
+    return {"verify_call_hits": vc.hits, "verify_call_misses": vc.misses,
+            "verify_call_cached": vc.currsize,
+            "group_layout_hits": gq.hits, "group_layout_misses": gq.misses,
+            "group_layout_cached": gq.currsize}
+
+
 def step_host_transfer_elems(ssv: SSVConfig) -> int:
     """Elements the fused step hands to the host per iteration: the padded
     accepted-token vector plus the (bonus, n_accepted) scalars. Compare with
@@ -226,6 +242,11 @@ class SSVEngine:
     def __init__(self, target_params, target_cfg: ModelConfig, draft_params,
                  draft_cfg: ModelConfig, serve_cfg: ServeConfig, planner=None,
                  rng_seed: int = 0, instrument: bool = False):
+        if getattr(planner, "is_batch_planner", False):
+            raise ValueError(
+                "BatchPlanner plans bucket-local execution groups over a "
+                "batch; the single-stream SSVEngine takes a RuntimePlanner — "
+                "use BatchedSSVEngine for bucketed serving")
         self.tp, self.tcfg = target_params, target_cfg
         self.dp, self.dcfg = draft_params, draft_cfg
         self.serve = serve_cfg
@@ -370,6 +391,10 @@ class SSVEngine:
             if caches is not None:
                 total += kvstore.kv_cache_bytes(caches["segments"])
         return total
+
+    def kernel_cache_stats(self) -> Dict[str, int]:
+        """Kernel-layer cache hit/miss counters (process-wide)."""
+        return kernel_cache_stats()
 
 
 # ------------------------------------------------------------ batched engine
@@ -566,6 +591,114 @@ def admit_row_segments(batch_segs, row_segs, row):
         batch_segs, row_segs)
 
 
+# ------------------------------------------------- bucket-local group steps
+class StepCompileCache:
+    """Explicit AOT compile cache for the bucketed engine's fused group
+    steps, keyed by (strategy, padded group size).
+
+    jax.jit's implicit trace cache would retrace on first contact with every
+    new (strategy, shape) pair — a multi-second stall that lands mid-serve
+    exactly when the runtime guard switches a bucket's strategy. Entries here
+    are ``.lower(...).compile()`` executables, populated either lazily (a
+    recorded miss) or up front by ``BatchedSSVEngine.warmup``; hit/miss
+    counts surface in the engine's kernel-cache metrics."""
+
+    def __init__(self):
+        self._exe: Dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def size(self) -> int:
+        return len(self._exe)
+
+    def __contains__(self, key) -> bool:
+        return key in self._exe
+
+    def get_or_build(self, key, build):
+        exe = self._exe.get(key)
+        if exe is None:
+            self.misses += 1
+            exe = build()
+            self._exe[key] = exe
+        else:
+            self.hits += 1
+        return exe
+
+    def stats(self) -> Dict[str, int]:
+        return {"step_cache_hits": self.hits,
+                "step_cache_misses": self.misses,
+                "step_cache_cached": len(self._exe)}
+
+
+@jax.jit
+def _take_leaves(leaves, idx):
+    """One fused dispatch gathering batch rows ``idx`` (axis 1) out of a
+    list of row-batched cache leaves."""
+    return [jnp.take(a, idx, axis=1) for a in leaves]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnums=(3,))
+def _scatter_leaves(batch_leaves, group_leaves, ridx, r: int):
+    """One fused, donated dispatch writing the first ``r`` group rows back
+    into the batch leaves at rows ``ridx`` (axis 1). Padded duplicate rows
+    past ``r`` are dropped — scattering them would race the real row."""
+    return [b.at[:, ridx].set(
+                jax.lax.slice_in_dim(g, 0, r, axis=1).astype(b.dtype))
+            for b, g in zip(batch_leaves, group_leaves)]
+
+
+def _pool_flags(segs, store: kvstore.KVStoreConfig):
+    """Per-leaf booleans marking the paged store's shared-pool leaves (flat
+    order aligned with ``jax.tree.flatten(segs)``)."""
+    if not store.is_paged:
+        return None
+    flags = kvstore.map_segments(segs, lambda _: True, lambda _: False)
+    return jax.tree.flatten(flags)[0]
+
+
+def gather_group_segments(segs, idx, store: kvstore.KVStoreConfig):
+    """Gather one execution group's rows out of a batched cache pytree.
+
+    Dense: every leaf is row-batched on axis 1 — the group's KV rows are
+    copied out in one fused dispatch (and written back by
+    ``scatter_group_segments``). Paged: the shared page pool passes through
+    BY REFERENCE — no KV copy; only the row-batched leaves (cmp / recurrent
+    state, 16x smaller than raw KV) are gathered, and each row reads the
+    pool through its own page-table row."""
+    flat, treedef = jax.tree.flatten(segs)
+    pool = _pool_flags(segs, store)
+    if pool is None:
+        return jax.tree.unflatten(treedef, _take_leaves(flat, idx))
+    rows = [a for a, p in zip(flat, pool) if not p]
+    taken = iter(_take_leaves(rows, idx))
+    return jax.tree.unflatten(
+        treedef, [a if p else next(taken) for a, p in zip(flat, pool)])
+
+
+def scatter_group_segments(batch_segs, group_segs, ridx, r: int,
+                           store: kvstore.KVStoreConfig):
+    """Land a stepped group back into the batched cache pytree (only the
+    ``r`` real rows; padding duplicates are dropped). Row-batched leaves are
+    written with one fused, donated dispatch. The paged pool leaf is
+    REPLACED wholesale: the group step committed into the shared (donated)
+    pool in place, so its output is the batch's new pool — the stale pool
+    leaf inside ``batch_segs`` was consumed by that donation and is never
+    touched here."""
+    flat_b, treedef = jax.tree.flatten(batch_segs)
+    flat_g = jax.tree.flatten(group_segs)[0]
+    pool = _pool_flags(batch_segs, store)
+    if pool is None:
+        return jax.tree.unflatten(treedef,
+                                  _scatter_leaves(flat_b, flat_g, ridx, r))
+    rows_b = [a for a, p in zip(flat_b, pool) if not p]
+    rows_g = [a for a, p in zip(flat_g, pool) if not p]
+    written = iter(_scatter_leaves(rows_b, rows_g, ridx, r))
+    return jax.tree.unflatten(
+        treedef, [g if p else next(written)
+                  for g, p in zip(flat_g, pool)])
+
+
 class BatchedSSVEngine:
     """True multi-request SSV engine: one device launch per step serves the
     whole batch, with per-request committed lengths, per-request acceptance,
@@ -578,9 +711,15 @@ class BatchedSSVEngine:
     step) without perturbing in-flight rows; ``serve_continuous`` runs the
     full queue → admit → step loop against a ``schedule.Scheduler``.
 
-    The verification strategy is shared across the batch (the tree topology
-    must be uniform for vectorization); a planner, if supplied, observes the
-    mean acceptance over active rows and switches strategy for the batch.
+    The verification strategy is shared within one fused launch (the tree
+    topology must be uniform for vectorization). A ``RuntimePlanner``
+    observes the mean acceptance over active rows and switches ONE strategy
+    for the whole batch; a ``planner_lib.BatchPlanner`` instead partitions
+    the live slots into context-regime execution groups and
+    ``serve_continuous`` launches one fused ``step_group`` per group under
+    that bucket's profile strategy — mixed-length batches stop paying a
+    one-size-fits-all topology (see the bucketed paragraph on
+    ``serve_continuous``).
     """
 
     def __init__(self, target_params, target_cfg: ModelConfig, draft_params,
@@ -611,8 +750,23 @@ class BatchedSSVEngine:
             self._page_size = self.store.page_size
             self._max_pages = self.store.logical_pages(serve_cfg.max_context,
                                                        self._page_size)
+        # bucket-local execution groups: AOT-compiled per-(strategy, padded
+        # group size) fused steps; see step_group / warmup
+        self.step_cache = StepCompileCache()
+        self._step_cache_slots: Optional[int] = None
 
     # -------------------------------------------------------------- setup
+    def _planner_begin(self, context_len: int):
+        """Reset the attached planner for a fresh serving run: a BatchPlanner
+        resets its per-bucket guards, a RuntimePlanner re-seeds from the
+        batch's context regime."""
+        if self.planner is None:
+            return
+        if getattr(self.planner, "is_batch_planner", False):
+            self.planner.begin_serve()
+        else:
+            self.planner.begin_request(context_len=context_len)
+
     def _max_gamma(self) -> int:
         return max_draft_gamma(self.serve, self.planner)
 
@@ -660,6 +814,93 @@ class BatchedSSVEngine:
         return (kvstore.kv_cache_bytes(self.t_segs)
                 + kvstore.kv_cache_bytes(self.d_segs))
 
+    def kernel_cache_stats(self) -> Dict[str, int]:
+        """Engine cache metrics next to ``kv_cache_bytes``: process-wide
+        kernel build / layout caches plus this engine's group-step AOT
+        compile cache."""
+        stats = kernel_cache_stats()
+        stats.update(self.step_cache.stats())
+        return stats
+
+    # --------------------------------------------- group-step compile cache
+    def _padded_group_sizes(self) -> List[int]:
+        """The batch sizes a group launch can take: powers of two up to the
+        slot count (plus the slot count itself). Execution groups are padded
+        up to the next size so the compile cache holds O(log slots) shapes
+        per strategy instead of one per arbitrary group size."""
+        sizes, g = [], 1
+        while g < self.batch:
+            sizes.append(g)
+            g *= 2
+        sizes.append(self.batch)
+        return sizes
+
+    def _group_step_specs(self, ssv: SSVConfig, g: int) -> List:
+        """Abstract (shape, dtype) argument list of the fused step for a
+        ``g``-row execution group — what ``.lower`` needs to AOT-compile it
+        without touching real buffers. Derived from the live caches, so it
+        matches ``step_group``'s gathered arguments exactly."""
+        spec = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+        row_spec = lambda a: jax.ShapeDtypeStruct(
+            a.shape[:1] + (g,) + a.shape[2:], a.dtype)
+        if self.store.is_paged:
+            segs_spec = lambda segs: kvstore.map_segments(segs, spec, row_spec)
+        else:
+            segs_spec = lambda segs: jax.tree.map(row_spec, segs)
+        ivec = jax.ShapeDtypeStruct((g,), jnp.int32)
+        bvec = jax.ShapeDtypeStruct((g,), jnp.bool_)
+        args = [jax.tree.map(spec, self.tp), jax.tree.map(spec, self.dp),
+                segs_spec(self.t_segs), ivec, segs_spec(self.d_segs), ivec]
+        if self.store.is_paged:
+            args.append(jax.ShapeDtypeStruct((g, self._max_pages), jnp.int32))
+        args += [ivec, bvec, bvec, ivec, ivec]
+        if self.serve.temperature != 0.0:
+            topo = build_topology(ssv.tree_depth, ssv.tree_width,
+                                  ssv.traversal, ssv.tree_budget)
+            maxd = int(topo.depths.max()) if topo.num_nodes else 0
+            kmax = max(1, children_matrix(topo).shape[1])
+            args.append(jax.ShapeDtypeStruct((g, maxd + 1, kmax), jnp.float32))
+            args.append(jax.ShapeDtypeStruct((g,), jnp.float32))
+        return args
+
+    def _compiled_group_step(self, ssv: SSVConfig, g: int):
+        """The AOT-compiled fused step for a ``g``-row group under ``ssv``,
+        from the explicit compile cache (lazy-compile on miss)."""
+        greedy = self.serve.temperature == 0.0
+        key = (ssv, int(g))
+
+        def build():
+            fn = jit_batched_step(self.tcfg, self.dcfg, ssv, greedy,
+                                  self.serve.temperature, self.store)
+            return fn.lower(*self._group_step_specs(ssv, g)).compile()
+
+        return self.step_cache.get_or_build(key, build)
+
+    def warmup(self, num_slots: Optional[int] = None,
+               strategies: Optional[Sequence[SSVConfig]] = None) -> int:
+        """Opt-in AOT warmup: compile the fused group step for every
+        (strategy, padded group size) bucketed serving can launch, so a
+        mid-serve strategy switch — or a group size first seen mid-flight —
+        lands on a ready executable instead of stalling the whole batch on a
+        retrace. ``strategies`` defaults to the attached BatchPlanner's
+        reachable set (per bucket: the top rank plus every refinement hop the
+        guard can take). Returns the number of executables compiled."""
+        if strategies is None:
+            if not getattr(self.planner, "is_batch_planner", False):
+                raise ValueError(
+                    "warmup compiles the bucketed group-step cache: attach a "
+                    "planner_lib.BatchPlanner (profile-backed) or pass the "
+                    "strategies to compile explicitly")
+            strategies = self.planner.reachable_strategies()
+        if self.t_segs is None or (num_slots is not None
+                                   and num_slots != self.batch):
+            self.start_empty(num_slots or self.serve.max_batch)
+        before = self.step_cache.size
+        for ssv in strategies:
+            for g in self._padded_group_sizes():
+                self._compiled_group_step(ssv, g)
+        return self.step_cache.size - before
+
     def start(self, prompts: Sequence[np.ndarray]):
         R = len(prompts)
         if R < 1:
@@ -673,9 +914,7 @@ class BatchedSSVEngine:
             self.start_empty(R)
             for i, p in enumerate(prompts):
                 self.admit(i, p)
-            if self.planner is not None:
-                self.planner.begin_request(
-                    context_len=int(np.max([len(p) for p in prompts])))
+            self._planner_begin(int(np.max([len(p) for p in prompts])))
             return
         max_len = self.serve.max_context
         t_parts, d_parts = [], []
@@ -698,9 +937,7 @@ class BatchedSSVEngine:
         self.committed_len = np.array([len(p) - 1 for p in prompts], np.int64)
         self.batch = R
         self._reset_admission(R)
-        if self.planner is not None:
-            self.planner.begin_request(
-                context_len=int(np.max([len(p) for p in prompts])))
+        self._planner_begin(int(np.max([len(p) for p in prompts])))
 
     def start_empty(self, num_slots: int):
         """Allocate ``num_slots`` empty batch slots (zeroed caches, length 0).
@@ -708,6 +945,12 @@ class BatchedSSVEngine:
         ``admit``, so admitted-mid-flight rows share one code path."""
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if self.store.is_paged and self._step_cache_slots != num_slots:
+            # the shared pool's physical size follows the slot count, so
+            # group-step executables compiled for another slot count are
+            # stale; dense group shapes are slot-count independent
+            self.step_cache = StepCompileCache()
+        self._step_cache_slots = num_slots
         max_len = self.serve.max_context
         self.t_segs = model.init_caches(self.tcfg, num_slots, max_len,
                                         self.store)["segments"]
@@ -787,6 +1030,12 @@ class BatchedSSVEngine:
         admitted since the last step have their device length / pending root
         reset inside this same launch (per-row admission mask), so the launch
         serves freshly-admitted and mid-generation rows together."""
+        if strategy is None and getattr(self.planner, "is_batch_planner",
+                                        False):
+            raise ValueError(
+                "a BatchPlanner has no single batch-wide strategy — pass "
+                "strategy= explicitly, or serve through serve_continuous / "
+                "step_group so each execution group gets its bucket's plan")
         ssv = strategy or (self.planner.current() if self.planner else self.serve.ssv)
         greedy = self.serve.temperature == 0.0
         step_fn = jit_batched_step(self.tcfg, self.dcfg, ssv, greedy,
@@ -818,6 +1067,88 @@ class BatchedSSVEngine:
         self.committed_len = self.committed_len + np.where(live, n_np + 1, 0)
         return toks_np, n_np
 
+    def step_group(self, rows: Sequence[int],
+                   strategy: SSVConfig) -> Tuple[np.ndarray, np.ndarray]:
+        """Advance one bucket-local execution group: gather ``rows`` out of
+        the batch, run one fused step under ``strategy`` (from the AOT
+        compile cache), scatter the results back. Every listed row is
+        stepped (the per-row admission resets of freshly-admitted rows are
+        consumed exactly like ``step``); rows outside the group are
+        untouched — their cache bytes, lengths, and pending roots stay
+        byte-identical, so different groups can run different strategies in
+        the same serving round.
+
+        The group is padded to the next cached group size with an INACTIVE
+        duplicate of the first row (no-op commit; outputs dropped at
+        scatter), keeping compiled shapes to O(log slots) per strategy. The
+        paged store's page pool is threaded through shared and donated — no
+        KV copy; dense groups pay one gather + one scatter of their rows.
+
+        Returns (tokens (r, pad+1), n_accepted (r,)) aligned with ``rows``.
+        """
+        rows = [int(s) for s in rows]
+        if not rows:
+            raise ValueError("empty execution group — nothing to step")
+        if len(set(rows)) != len(rows):
+            raise ValueError(f"duplicate rows in execution group {rows}")
+        for s in rows:
+            if not 0 <= s < self.batch:
+                raise ValueError(f"row {s} out of range for batch {self.batch}")
+        r = len(rows)
+        # fast path: a group covering the whole batch (the common case under
+        # the bucket-homogeneous admission policy) steps the engine caches
+        # directly — donated in place, no gather/scatter at all
+        full = rows == list(range(self.batch))
+        g = r if full else next(s for s in self._padded_group_sizes()
+                                if s >= r)
+        pad_rows = rows + [rows[0]] * (g - r)
+        active = np.zeros((g,), bool)
+        active[:r] = True
+        admit_mask = self._admit_mask[pad_rows].copy()
+        admit_mask[r:] = False           # pads never reset the real row
+        admit_len = np.asarray(self._admit_len[pad_rows], np.int32)
+        admit_pending = np.asarray(self._admit_pending[pad_rows], np.int32)
+        step_fn = self._compiled_group_step(strategy, g)
+        if full:
+            t_grp, d_grp = self.t_segs, self.d_segs
+            t_len_in, d_len_in = self.t_len, self.d_len
+        else:
+            idx = jnp.asarray(np.asarray(pad_rows, np.int32))
+            t_grp = gather_group_segments(self.t_segs, idx, self.store)
+            d_grp = gather_group_segments(self.d_segs, idx, self.store)
+            t_len_in = jnp.take(self.t_len, idx)
+            d_len_in = jnp.take(self.d_len, idx)
+        args = [self.tp, self.dp, t_grp, t_len_in, d_grp, d_len_in]
+        if self.store.is_paged:
+            args.append(jnp.asarray(self.pages[pad_rows]))
+        args += [jnp.asarray(self.pending[pad_rows]), jnp.asarray(active),
+                 jnp.asarray(admit_mask), jnp.asarray(admit_len),
+                 jnp.asarray(admit_pending)]
+        self._admit_mask[rows] = False   # consumed by this launch
+        if self.serve.temperature != 0.0:
+            topo = build_topology(strategy.tree_depth, strategy.tree_width,
+                                  strategy.traversal, strategy.tree_budget)
+            us = [accept_lib.draw_uniforms(topo, self.rng) for _ in range(g)]
+            args.append(jnp.asarray(np.stack([u for u, _ in us]), jnp.float32))
+            args.append(jnp.asarray([b for _, b in us], jnp.float32))
+        (t_grp, t_len_g, d_grp, d_len_g, out_tokens, n_acc) = step_fn(*args)
+        if full:
+            self.t_segs, self.d_segs = t_grp, d_grp
+            self.t_len, self.d_len = t_len_g, d_len_g
+        else:
+            ridx = jnp.asarray(np.asarray(rows, np.int32))
+            self.t_segs = scatter_group_segments(self.t_segs, t_grp, ridx, r,
+                                                 self.store)
+            self.d_segs = scatter_group_segments(self.d_segs, d_grp, ridx, r,
+                                                 self.store)
+            self.t_len = self.t_len.at[ridx].set(t_len_g[:r])
+            self.d_len = self.d_len.at[ridx].set(d_len_g[:r])
+        toks_np = np.asarray(out_tokens)[:r]
+        n_np = np.asarray(n_acc)[:r]
+        self.pending[rows] = toks_np[np.arange(r), n_np].astype(np.int32)
+        self.committed_len[rows] = self.committed_len[rows] + n_np + 1
+        return toks_np, n_np
+
     # -------------------------------------------------------------- generate
     def generate_batch(self, prompts: Sequence[np.ndarray],
                        max_new_tokens: int = 0,
@@ -836,8 +1167,9 @@ class BatchedSSVEngine:
 
     # -------------------------------------------------------------- continuous
     def serve_continuous(self, requests: Sequence, num_slots: int,
-                         max_new_tokens: int = 0,
-                         eos_id: int = -1) -> "ContinuousServeResult":
+                         max_new_tokens: int = 0, eos_id: int = -1,
+                         bucketed: Optional[bool] = None,
+                         warmup: bool = False) -> "ContinuousServeResult":
         """Continuous-batching serve loop: admit queued requests into freed
         slots mid-flight instead of draining the batch between waves.
 
@@ -846,8 +1178,35 @@ class BatchedSSVEngine:
         Per-row generation semantics are identical to single-stream
         ``SSVEngine.generate`` — admission never perturbs in-flight rows
         (tests/test_engine_continuous.py asserts token equality).
+
+        Bucketed mode (``bucketed=None`` auto-enables it when the attached
+        planner is a ``planner_lib.BatchPlanner``): each round, the live
+        slots are partitioned into context-regime execution groups and one
+        fused group step runs per group under the profile's strategy for
+        that (bucket, precision class) — a mixed-length batch no longer
+        forces short-context rows onto a long-context tree topology. The
+        scheduler switches to the bucket-homogeneous admission policy, and
+        per-row token streams stay byte-identical to single-stream
+        generation under the row's bucket strategy
+        (tests/test_engine_bucketed.py). ``warmup=True`` AOT-compiles every
+        reachable (strategy, group size) step before serving starts.
         """
         max_new_default = max_new_tokens or self.serve.max_new_tokens
+        is_bp = bool(getattr(self.planner, "is_batch_planner", False))
+        if bucketed is None:
+            bucketed = is_bp
+        if bucketed and not is_bp:
+            raise ValueError(
+                "bucketed serving assigns each execution group its profile "
+                "strategy — attach a planner_lib.BatchPlanner (built from an "
+                "offline Profile); got "
+                f"{type(self.planner).__name__ if self.planner else 'no planner'}")
+        if is_bp and not bucketed:
+            raise ValueError("a BatchPlanner only drives bucketed serving; "
+                             "pass bucketed=True (or leave it None)")
+        if warmup and not bucketed:
+            raise ValueError("warmup=True pre-compiles the bucketed "
+                             "group-step cache; it needs bucketed serving")
         reqs: List[schedule_lib.Request] = []
         for i, r in enumerate(requests):
             if isinstance(r, schedule_lib.Request):
@@ -863,6 +1222,11 @@ class BatchedSSVEngine:
         for r in reqs:   # fail fast, before any slot state exists
             self._check_prompt(np.asarray(r.prompt),
                                what=f"request {r.req_id} prompt")
+        sched_kwargs = {}
+        if bucketed:
+            sched_kwargs = dict(
+                policy="bucket",
+                bucket_of=lambda r: self.planner.bucket_of(len(r.prompt)))
         if self.store.is_paged:
             total_pages = self.store.resolved_num_pages(num_slots,
                                                         self._max_pages)
@@ -877,13 +1241,17 @@ class BatchedSSVEngine:
             sched = schedule_lib.Scheduler(
                 num_slots, pages_for=pages_of,
                 free_pages=lambda: self.allocator.free_count,
-                total_pages=total_pages)
+                total_pages=total_pages, **sched_kwargs)
         else:
-            sched = schedule_lib.Scheduler(num_slots)
+            sched = schedule_lib.Scheduler(num_slots, **sched_kwargs)
         for r in reqs:
             sched.submit(r)
         self.start_empty(num_slots)
-        if self.planner is not None:
+        if bucketed:
+            self.planner.begin_serve()
+            if warmup:
+                self.warmup()
+        elif self.planner is not None:
             self.planner.begin_request(
                 context_len=int(max(len(r.prompt) for r in reqs)))
 
@@ -891,6 +1259,8 @@ class BatchedSSVEngine:
         step_logs: Dict[int, List[StepStats]] = {r.req_id: [] for r in reqs}
         occupancy: List[float] = []
         page_occupancy: List[float] = []
+        bucket_occ: List[Dict[int, float]] = []
+        group_launches = 0
         # context stop bound sized for the LARGEST strategy the planner can
         # switch to (a switch lands one step after this check runs)
         stop_margin = self._step_headroom()
@@ -899,6 +1269,31 @@ class BatchedSSVEngine:
         t_start = time.time()
         budget = sum((r.max_new_tokens or max_new_default) for r in reqs)
         safety = 4 * budget + 16 * len(reqs) + 16
+
+        def harvest(slot, n, toks_row, dt, gamma, ssv):
+            """Account one stepped row: record stats, stream its new tokens,
+            and finish/release the slot at eos / budget / context bound.
+            Shared verbatim by the single-launch and bucketed paths."""
+            req = sched.request_at(slot)
+            out = outs[req.req_id]
+            limit = req.max_new_tokens or max_new_default
+            step_logs[req.req_id].append(StepStats(
+                accepted=n, emitted=n + 1, latency_s=dt, gamma=gamma,
+                strategy=ssv, host_elems=len(toks_row) + 1))
+            finished = False
+            for t in toks_row[: n + 1]:
+                out.append(int(t))
+                if int(t) == eos_id or len(out) >= limit:
+                    finished = True
+                    break
+            if self.committed_len[slot] + stop_margin >= self.serve.max_context:
+                finished = True
+            if finished:
+                sched.finish(slot, now=clock + 1.0)
+                if self.store.is_paged:
+                    self._free_slot_pages(slot)   # pages return to pool
+                sched.release(slot)
+
         while not sched.idle():
             for slot, req in sched.admit(clock):
                 self.admit(slot, req.prompt,
@@ -915,39 +1310,44 @@ class BatchedSSVEngine:
             occupancy.append(float(active.sum()) / num_slots)
             if self.store.is_paged:
                 page_occupancy.append(sched.page_occupancy())
-            ssv = (self.planner.current() if self.planner else self.serve.ssv)
-            gamma = build_topology(ssv.tree_depth, ssv.tree_width,
-                                   ssv.traversal, ssv.tree_budget).num_nodes - 1
-            t0 = time.perf_counter()
-            toks, n_acc = self.step(active=active)
-            dt = time.perf_counter() - t0
-            accepted_active = []
-            for slot in np.nonzero(active)[0]:
-                slot = int(slot)
-                req = sched.request_at(slot)
-                out = outs[req.req_id]
-                limit = req.max_new_tokens or max_new_default
-                n = int(n_acc[slot])
-                accepted_active.append(n)
-                step_logs[req.req_id].append(StepStats(
-                    accepted=n, emitted=n + 1, latency_s=dt, gamma=gamma,
-                    strategy=ssv, host_elems=toks.shape[1] + 1))
-                finished = False
-                for t in toks[slot, : n + 1]:
-                    out.append(int(t))
-                    if int(t) == eos_id or len(out) >= limit:
-                        finished = True
-                        break
-                if self.committed_len[slot] + stop_margin >= self.serve.max_context:
-                    finished = True
-                if finished:
-                    sched.finish(slot, now=clock + 1.0)
-                    if self.store.is_paged:
-                        self._free_slot_pages(slot)   # pages return to pool
-                    sched.release(slot)
-            if self.planner is not None and accepted_active:
-                self.planner.observe(accepted=float(np.mean(accepted_active)),
-                                     latency_s=dt)
+            if bucketed:
+                bucket_occ.append(sched.bucket_occupancy())
+                slot_buckets = {
+                    int(s): self.planner.bucket_of(
+                        len(sched.request_at(int(s)).prompt))
+                    for s in np.nonzero(active)[0]}
+                for bucket, rows in self.planner.plan(slot_buckets):
+                    strat = self.planner.strategy_for(bucket)
+                    gamma = build_topology(
+                        strat.tree_depth, strat.tree_width, strat.traversal,
+                        strat.tree_budget).num_nodes - 1
+                    t0 = time.perf_counter()
+                    toks_g, n_g = self.step_group(rows, strat)
+                    dt = time.perf_counter() - t0
+                    group_launches += 1
+                    for j, slot in enumerate(rows):
+                        harvest(slot, int(n_g[j]), toks_g[j], dt, gamma, strat)
+                    self.planner.observe(bucket, accepted=float(np.mean(n_g)),
+                                         latency_s=dt)
+            else:
+                ssv = (self.planner.current() if self.planner
+                       else self.serve.ssv)
+                gamma = build_topology(ssv.tree_depth, ssv.tree_width,
+                                       ssv.traversal,
+                                       ssv.tree_budget).num_nodes - 1
+                t0 = time.perf_counter()
+                toks, n_acc = self.step(active=active)
+                dt = time.perf_counter() - t0
+                accepted_active = []
+                for slot in np.nonzero(active)[0]:
+                    slot = int(slot)
+                    n = int(n_acc[slot])
+                    accepted_active.append(n)
+                    harvest(slot, n, toks[slot], dt, gamma, ssv)
+                if self.planner is not None and accepted_active:
+                    self.planner.observe(
+                        accepted=float(np.mean(accepted_active)),
+                        latency_s=dt)
             clock += 1.0
             n_steps += 1
             if n_steps > safety:   # shapes guarantee progress; belt-and-braces
@@ -955,11 +1355,20 @@ class BatchedSSVEngine:
         wall = time.time() - t_start
         results = [GenerationResult(tokens=np.asarray(outs[r.req_id]),
                                     steps=step_logs[r.req_id]) for r in reqs]
+        # mean decoding-slot fraction per bucket over the stepped rounds
+        bucket_means: Dict[int, float] = {}
+        if bucket_occ:
+            for b in sorted({b for occ in bucket_occ for b in occ}):
+                bucket_means[b] = float(
+                    np.mean([occ.get(b, 0.0) for occ in bucket_occ]))
         return ContinuousServeResult(results=results, requests=reqs,
                                      steps=n_steps, wall_s=wall,
                                      occupancy=occupancy,
                                      page_occupancy=page_occupancy,
-                                     kv_bytes=self.kv_cache_bytes())
+                                     kv_bytes=self.kv_cache_bytes(),
+                                     bucket_occupancy=bucket_means,
+                                     group_launches=group_launches,
+                                     kernel_cache=self.kernel_cache_stats())
 
 
 @dataclasses.dataclass
@@ -976,6 +1385,13 @@ class ContinuousServeResult:
     # KV footprint of the run's caches (pool bytes; dense: row bytes)
     page_occupancy: List[float] = dataclasses.field(default_factory=list)
     kv_bytes: int = 0
+    # bucketed serving only: mean decoding-slot fraction per context bucket
+    # and the number of fused group launches issued (== steps when every
+    # round had one homogeneous group)
+    bucket_occupancy: Dict[int, float] = dataclasses.field(default_factory=dict)
+    group_launches: int = 0
+    # kernel-layer + group-step cache hit/miss counters at run end
+    kernel_cache: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def total_tokens(self) -> int:

@@ -13,6 +13,7 @@ scalar-prefetch path consumes.
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
@@ -74,13 +75,21 @@ def pairwise_overlap_by_distance(sel_idx, sel_valid, positions, max_delta: int =
     return np.arange(1, max_delta + 1), jnp.stack(out)
 
 
+@functools.lru_cache(maxsize=4096)
 def group_queries(T: int, C: int):
     """Static grouping of a flattened draft batch into ceil(T/C) groups of up
-    to C adjacent queries (the traversal order determines adjacency)."""
+    to C adjacent queries (the traversal order determines adjacency).
+
+    Memoized by (T, C): the layout map is pure host-side numpy and was being
+    rebuilt on every fused-verify call (`kernels/nsa_verify/ops.prepare_groups`
+    invokes it once per layer per step). The cached array is marked
+    read-only so call sites cannot mutate the shared copy."""
     ngroups = pad_to_groups(T, C)
     pad = ngroups * C - T
     qidx = np.concatenate([np.arange(T), np.full(pad, T - 1)])      # clamp pad
-    return qidx.reshape(ngroups, C), pad
+    qmap = qidx.reshape(ngroups, C)
+    qmap.setflags(write=False)
+    return qmap, pad
 
 
 def merged_schedule(sel_idx, sel_valid, C: int):

@@ -217,3 +217,104 @@ class RuntimePlanner:
                            key=lambda e: (e[1] + 1.0) / max(e[2], 1e-9))
                 self.rank = best[0]
             self.below = 0
+
+
+class BatchPlanner:
+    """Bucket-local batched planning: profile-guided execution groups for a
+    mixed-length continuous batch.
+
+    Where ``RuntimePlanner`` drives ONE strategy per request stream, the
+    BatchPlanner partitions the live batch slots by context-regime bucket and
+    assigns each group the profile's top-ranked strategy for its (bucket,
+    precision class). Every bucket carries its own runtime guard — a full
+    ``RuntimePlanner`` seeded at that bucket's profile entries — so the EMA /
+    hysteresis refinement machinery (Algorithm 1) runs per execution group:
+    a long-context group refining to its next-ranked strategy never perturbs
+    the short-context group's plan.
+
+    The engine (``BatchedSSVEngine.serve_continuous`` with bucketed mode)
+    asks ``plan`` for the execution groups each fused-step round, launches
+    one fused step per group under ``strategy_for(bucket)``, and feeds the
+    group's mean acceptance back through ``observe(bucket, ...)``.
+    """
+
+    is_batch_planner = True
+
+    def __init__(self, profile: Profile, precision_class: str = "Strict",
+                 alpha: float = ALPHA, rho: float = RHO,
+                 warmup_m: int = WARMUP_M, hysteresis_h: int = HYSTERESIS_H,
+                 max_transitions: int = MAX_TRANSITIONS,
+                 early_window: int = 64):
+        missing = [b for b in range(len(profile.buckets))
+                   if not profile.table.get((b, precision_class))]
+        if missing:
+            have = sorted({pc for (_, pc) in profile.table})
+            raise ValueError(
+                f"profile has no ranked strategies for precision class "
+                f"{precision_class!r} in bucket(s) {missing} — a request "
+                "landing there could not be planned; this profile covers "
+                f"{have}")
+        self.profile = profile
+        self.pc = precision_class
+        self._guard_kwargs = dict(alpha=alpha, rho=rho, warmup_m=warmup_m,
+                                  hysteresis_h=hysteresis_h,
+                                  max_transitions=max_transitions,
+                                  early_window=early_window)
+        self.max_transitions = max_transitions
+        self.guards: Dict[int, RuntimePlanner] = {}
+
+    # ---------------------------------------------------------------- buckets
+    def bucket_of(self, context_len: int) -> int:
+        return bucket_of(context_len, self.profile.buckets)
+
+    def begin_serve(self):
+        """Reset every bucket guard — call once per serving run."""
+        self.guards = {}
+
+    def _guard(self, bucket: int) -> RuntimePlanner:
+        g = self.guards.get(bucket)
+        if g is None:
+            g = RuntimePlanner(self.profile, self.pc, **self._guard_kwargs)
+            # seed the guard at the bucket's representative context length
+            g.begin_request(context_len=self.profile.buckets[bucket][0])
+            self.guards[bucket] = g
+        return g
+
+    # ---------------------------------------------------------------- plan
+    def strategy_for(self, bucket: int) -> SSVConfig:
+        """Current (guard-refined) strategy of one bucket's execution group."""
+        return self._guard(bucket).current()
+
+    def plan(self, slot_buckets: Dict[int, int]) -> List[Tuple[int, List[int]]]:
+        """Partition live slots into bucket-homogeneous execution groups.
+
+        ``slot_buckets``: slot index -> context bucket for every slot to
+        advance this round. Returns ``[(bucket, [slots...]), ...]`` sorted by
+        bucket then slot — a deterministic launch order, so serving replays
+        are reproducible."""
+        groups: Dict[int, List[int]] = {}
+        for slot, b in slot_buckets.items():
+            groups.setdefault(int(b), []).append(int(slot))
+        return [(b, sorted(slots)) for b, slots in sorted(groups.items())]
+
+    def observe(self, bucket: int, accepted: float, latency_s: float):
+        """Feed one group-step's mean acceptance into that bucket's guard."""
+        self._guard(bucket).observe(accepted=accepted, latency_s=latency_s)
+
+    # ---------------------------------------------------------------- warmup
+    def reachable_strategies(self) -> List[SSVConfig]:
+        """Every strategy a serving run can launch: per bucket, the ranks the
+        guard can walk to (top rank + at most ``max_transitions`` refinement
+        hops). This is the AOT warmup set — compiling it up front means a
+        mid-serve strategy switch never stalls the batch on a retrace."""
+        out: List[SSVConfig] = []
+        for b in range(len(self.profile.buckets)):
+            entries = self.profile.table.get((b, self.pc), [])
+            for e in entries[: self.max_transitions + 1]:
+                if e.strategy not in out:
+                    out.append(e.strategy)
+        return out
+
+    @property
+    def refinement_events(self) -> int:
+        return sum(g.refinement_events for g in self.guards.values())

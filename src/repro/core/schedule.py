@@ -81,6 +81,12 @@ class RequestQueue:
         best_i = self._best_arrived(now)
         return self._items[best_i] if best_i is not None else None
 
+    def peek_arrived_where(self, now: float, pred) -> Optional[Request]:
+        """Earliest arrived request satisfying ``pred`` (stable on ties), or
+        None — the bucket-aware admission policy's preference probe."""
+        best_i = self._best_arrived(now, pred)
+        return self._items[best_i] if best_i is not None else None
+
     def remove(self, req: Request) -> None:
         """Identity-based removal: dataclass __eq__ would compare the
         ndarray prompt field (ambiguous truth value)."""
@@ -90,11 +96,12 @@ class RequestQueue:
                 return
         raise ValueError(f"request {req.req_id} is not in the queue")
 
-    def _best_arrived(self, now: float) -> Optional[int]:
+    def _best_arrived(self, now: float, pred=None) -> Optional[int]:
         best_i = None
         for i, r in enumerate(self._items):
-            if r.arrival <= now and (best_i is None
-                                     or r.arrival < self._items[best_i].arrival):
+            if r.arrival <= now and (pred is None or pred(r)) and \
+                    (best_i is None
+                     or r.arrival < self._items[best_i].arrival):
                 best_i = i
         return best_i
 
@@ -118,20 +125,38 @@ class Scheduler:
     than the entire pool is rejected by the engine at submit time, which is
     what keeps the wait from becoming a deadlock). ``page_occupancy()``
     reports the allocated-page fraction for serving stats.
+
+    Bucket-aware admission (``policy="bucket"``, needs ``bucket_of``): when
+    filling a freed slot, prefer the earliest arrived request whose context
+    bucket already has live rows in the batch — keeping execution groups
+    homogeneous so the bucketed serving loop launches fewer, fuller groups.
+    Falls back to the plain FIFO head when no arrived request matches (a new
+    bucket is opened rather than starving it). The default policy stays
+    plain FIFO; page gating applies to whichever candidate the policy picks.
     """
 
     def __init__(self, num_slots: int,
                  pages_for: Optional[Callable[[Request], int]] = None,
                  free_pages: Optional[Callable[[], int]] = None,
-                 total_pages: Optional[int] = None):
+                 total_pages: Optional[int] = None,
+                 bucket_of: Optional[Callable[[Request], int]] = None,
+                 policy: str = "fifo"):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if (pages_for is None) != (free_pages is None):
             raise ValueError("pages_for and free_pages come as a pair")
+        if policy not in ("fifo", "bucket"):
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             "choose fifo or bucket")
+        if policy == "bucket" and bucket_of is None:
+            raise ValueError("policy='bucket' needs bucket_of to classify "
+                             "requests into context buckets")
         self.num_slots = num_slots
         self.pages_for = pages_for
         self.free_pages = free_pages
         self.total_pages = total_pages
+        self.bucket_of = bucket_of
+        self.policy = policy
         self.queue = RequestQueue()
         self.states: List[SlotState] = [SlotState.FREE] * num_slots
         self.slot_req: List[Optional[Request]] = [None] * num_slots
@@ -154,7 +179,7 @@ class Scheduler:
         for slot in range(self.num_slots):
             if self.states[slot] is not SlotState.FREE:
                 continue
-            req = self.queue.peek_arrived(now)
+            req = self._pick_candidate(now)
             if req is None:
                 break
             if self.pages_for is not None:
@@ -171,6 +196,20 @@ class Scheduler:
             self.slot_req[slot] = req
             placed.append((slot, req))
         return placed
+
+    def _pick_candidate(self, now: float) -> Optional[Request]:
+        """The next request the admission policy would place: FIFO head, or —
+        under the bucket policy — the earliest arrival whose bucket already
+        has live rows (falling back to the FIFO head when none matches, so
+        empty batches and fresh buckets still admit)."""
+        if self.policy == "bucket":
+            live = {self.bucket_of(r) for r in self.slot_req if r is not None}
+            if live:
+                req = self.queue.peek_arrived_where(
+                    now, lambda r: self.bucket_of(r) in live)
+                if req is not None:
+                    return req
+        return self.queue.peek_arrived(now)
 
     def mark_decoding(self, slot: int) -> None:
         if self.states[slot] is not SlotState.PREFILLING:
@@ -211,6 +250,19 @@ class Scheduler:
         if self.free_pages is None or not self.total_pages:
             return 0.0
         return 1.0 - self.free_pages() / self.total_pages
+
+    def bucket_occupancy(self) -> dict:
+        """Decoding-slot fraction per context bucket (empty without a
+        ``bucket_of`` classifier) — the per-bucket serving stat the bucketed
+        engine reports next to plain slot occupancy."""
+        if self.bucket_of is None:
+            return {}
+        occ: dict = {}
+        for state, req in zip(self.states, self.slot_req):
+            if state is SlotState.DECODING and req is not None:
+                b = int(self.bucket_of(req))
+                occ[b] = occ.get(b, 0.0) + 1.0 / self.num_slots
+        return occ
 
     def next_arrival(self) -> Optional[float]:
         return self.queue.next_arrival()

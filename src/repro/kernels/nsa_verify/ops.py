@@ -32,9 +32,21 @@ def _pad_axis(x, axis: int, target: int):
     return jnp.pad(x, widths)
 
 
-@functools.lru_cache(maxsize=128)
+# Mixed-bucket serving multiplies the distinct kernel shapes in flight: each
+# execution group's (strategy, group-size) pair contributes its own (T, C, M,
+# ...) tuple per layer mode, so the seed maxsize of 128 could thrash once a
+# profile's worth of strategies serve concurrently. 1024 entries keep every
+# realistic shape set resident; hit/miss counters are surfaced through
+# ``verify_call_cache_info`` into the engines' kernel-cache metrics.
+@functools.lru_cache(maxsize=1024)
 def _cached_call(key):
     return K.build_verify_call(**dict(key))
+
+
+def verify_call_cache_info():
+    """Hit/miss/size counters of the fused-kernel build cache (process-wide —
+    every engine in the process shares one kernel cache)."""
+    return _cached_call.cache_info()
 
 
 def prepare_groups(q, gates, sel_idx, sel_valid, positions, C: int, mode: str,

@@ -2,10 +2,17 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch ssv-nsa-1b --reduced \
       --tokens 64 --precision-class Approx+Reuse
+  PYTHONPATH=src python -m repro.launch.serve --reduced --continuous \
+      --batch 4 --bucketed --profile-json profile.json --warmup
 
 Loads (or randomly initializes) target + draft, builds a small offline
 profile if planning is requested, and serves a batch of synthetic prompts,
 reporting accepted-token throughput vs the autoregressive baseline.
+``--bucketed`` serves a mixed-length workload through bucket-local
+execution groups (one fused step per context-regime bucket, each under the
+profile's strategy for that bucket — the profile JSON is a
+``planner_lib.Profile`` from ``Profile.to_json``); ``--warmup``
+AOT-compiles every reachable (strategy, group size) step before serving.
 """
 from __future__ import annotations
 
@@ -63,10 +70,33 @@ def main():
                     choices=list(planner_lib.PRECISION_CLASSES))
     ap.add_argument("--tree-depth", type=int, default=4)
     ap.add_argument("--tree-width", type=int, default=2)
+    ap.add_argument("--bucketed", action="store_true",
+                    help="continuous mode: partition the batch into context-"
+                         "regime execution groups, each stepping under its "
+                         "bucket's profile strategy (needs --profile-json); "
+                         "serves a mixed-length prompt workload")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile every reachable (strategy, group size) "
+                         "fused step before serving (bucketed only)")
+    ap.add_argument("--profile-json", default=None,
+                    help="offline profile (planner_lib.Profile JSON, e.g. "
+                         "written via Profile.to_json) backing --bucketed")
     ap.add_argument("--baseline", action="store_true",
                     help="also run the autoregressive decode baseline")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.bucketed:
+        if not args.continuous:
+            raise ValueError("--bucketed groups the continuous batch; "
+                             "add --continuous")
+        if not args.profile_json:
+            raise ValueError(
+                "--bucketed needs an offline profile to rank strategies per "
+                "context bucket: pass --profile-json <path> (a "
+                "planner_lib.Profile serialized with Profile.to_json)")
+    if args.warmup and not args.bucketed:
+        raise ValueError("--warmup pre-compiles the bucketed group-step "
+                         "cache; add --bucketed")
 
     cfg = cfglib.reduced(args.arch) if args.reduced else cfglib.get_config(args.arch)
     if cfg.attention != "nsa":
@@ -91,17 +121,33 @@ def main():
                             kv_num_pages=args.kv_num_pages)
 
     corpus = SyntheticCorpus(SyntheticConfig(vocab_size=cfg.vocab_size))
-    prompts = [corpus.batch(i, 1, args.prompt_len)[0] for i in range(args.prompts)]
+    if args.bucketed:
+        # mixed-length workload: spread prompt lengths across the profile's
+        # context buckets so the planner actually forms several groups
+        lens = [max(8, args.prompt_len // 2), args.prompt_len,
+                args.prompt_len * 2]
+        prompts = [corpus.batch(i, 1, lens[i % len(lens)])[0]
+                   for i in range(args.prompts)]
+    else:
+        prompts = [corpus.batch(i, 1, args.prompt_len)[0]
+                   for i in range(args.prompts)]
 
     if args.continuous:     # any batch size: --batch is the slot count
-        eng = engine_lib.BatchedSSVEngine(tp, cfg, dp, dcfg, serve_cfg)
+        planner = None
+        if args.bucketed:
+            with open(args.profile_json) as f:
+                profile = planner_lib.Profile.from_json(f.read())
+            planner = planner_lib.BatchPlanner(profile, args.precision_class)
+        eng = engine_lib.BatchedSSVEngine(tp, cfg, dp, dcfg, serve_cfg,
+                                          planner=planner)
         arrivals = schedule_lib.poisson_arrivals(
             len(prompts), args.arrival_rate, seed=args.seed)
         reqs = [schedule_lib.Request(req_id=i, prompt=p,
                                      arrival=float(arrivals[i]))
                 for i, p in enumerate(prompts)]
         res = eng.serve_continuous(reqs, num_slots=args.batch,
-                                   max_new_tokens=args.tokens)
+                                   max_new_tokens=args.tokens,
+                                   warmup=args.warmup)
         for req, gen in zip(res.requests, res.results):
             delay = (f"{req.queue_delay:.1f}" if req.queue_delay is not None
                      else "n/a (never admitted)")
@@ -112,6 +158,12 @@ def main():
               f"aggregate, {res.steps} fused steps, "
               f"occupancy {res.mean_occupancy:.2f}, "
               f"queue delay {res.mean_queue_delay_steps:.1f} steps)")
+        if args.bucketed:
+            occ = ", ".join(f"bucket{b}={v:.2f}"
+                            for b, v in sorted(res.bucket_occupancy.items()))
+            print(f"bucketed: {res.group_launches} group launches ({occ}); "
+                  f"step cache {res.kernel_cache['step_cache_hits']} hits / "
+                  f"{res.kernel_cache['step_cache_misses']} misses")
         return
 
     if args.batch > 1:

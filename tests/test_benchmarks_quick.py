@@ -50,6 +50,25 @@ def test_e2e_quick_emits_continuous_serving_row():
     assert kv["paged_peak_kv_bytes"] < kv["dense_peak_kv_bytes"]
     assert 0.0 < kv["kv_bytes_ratio"] < 1.0
     assert 0.0 <= kv["mean_page_occupancy"] <= 1.0
+    # bucket-local vs shared-strategy mixed-length serving: execution groups
+    # must be token-equal to single-stream generation under each row's
+    # bucket strategy (the benchmark asserts it while the rows are in hand)
+    # and must not lose aggregate accepted-token throughput to the one-
+    # strategy-for-the-whole-batch baseline
+    bk = report["bucketed"]
+    for key in ("shared_tok_s", "bucketed_tok_s", "speedup_vs_shared",
+                "group_launches", "bucket_occupancy", "step_cache",
+                "token_equal", "n_short", "n_long"):
+        assert key in bk, f"bucketed row missing {key!r}"
+    assert bk["token_equal"] is True
+    assert bk["bucketed_tok_s"] >= bk["shared_tok_s"], (
+        f"bucket-local serving ({bk['bucketed_tok_s']:.1f} tok/s) fell below "
+        f"the shared-strategy baseline ({bk['shared_tok_s']:.1f} tok/s)")
+    # the run really partitioned the batch: both context buckets held slots
+    assert len(bk["bucket_occupancy"]) >= 2
+    assert bk["group_launches"] >= bk["bucketed_fused_steps"]
+    # warmed AOT cache: every launch after warmup hit a compiled step
+    assert bk["step_cache"]["step_cache_hits"] > 0
 
 
 def test_runner_cli_quick_only_refinement(capsys):
@@ -75,3 +94,11 @@ def test_runner_cli_only_unknown_name_lists_valid_suites(capsys):
     assert "'nope'" in err
     for name, _ in bench_run.SUITES:
         assert name in err
+
+
+def test_runner_cli_list_prints_suites_and_exits_zero(capsys):
+    """``run.py --list`` prints every valid suite name (one per line) and
+    returns success without importing or running any suite."""
+    bench_run.main(["--list"])          # returning (no SystemExit) == exit 0
+    out = capsys.readouterr().out
+    assert out.splitlines() == [n for n, _ in bench_run.SUITES]

@@ -1,0 +1,238 @@
+"""Bucket-local batched planning invariants.
+
+The core invariant mirrors test_engine_continuous.py one level up: every
+request served by grouped ``serve_continuous`` — live slots partitioned into
+context-regime execution groups, each group stepping under its bucket's
+profile strategy, mid-flight admission, dense and paged KV backends — is
+byte-identical to single-stream ``SSVEngine.generate`` under that row's
+bucket strategy. On top sit the AOT warmup contract (no group-step compiles
+mid-serve once warmed), the group-step isolation guarantee (rows outside a
+group keep every cache byte), and the kernel-cache metrics satellites.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, NSAConfig, ServeConfig, SSVConfig
+from repro.core import draft as draft_lib
+from repro.core import engine as engine_lib
+from repro.core import overlap
+from repro.core import planner as P
+from repro.core import schedule as schedule_lib
+from repro.models import model
+
+NSA = NSAConfig(cmp_block=8, cmp_stride=4, sel_block=16, n_selected=4, window=32)
+MAX_NEW = 8
+BUCKETS = ((0, 20), (20, 512))
+SHORT = SSVConfig(tree_depth=1, tree_width=2)
+LONG = SSVConfig(tree_depth=2, tree_width=2)
+
+# lengths 18/15/17 fall in bucket 0, 23/20/21 in bucket 1
+PROMPTS = [np.arange(18) % 64, (np.arange(23) * 3) % 64,
+           (np.arange(15) * 7) % 64, (np.arange(20) * 5) % 64,
+           (np.arange(17) * 11) % 64, (np.arange(21) * 13) % 64]
+
+
+def _strategy_of(prompt) -> SSVConfig:
+    return (SHORT, LONG)[P.bucket_of(len(prompt), BUCKETS)]
+
+
+def _profile():
+    # expected_accept 0.0 keeps the per-bucket runtime guards quiescent, so
+    # each bucket's strategy — and therefore its token streams — is fixed
+    table = {(0, "Strict"): [P.ProfileEntry(SHORT, 0.0, 0.01)],
+             (1, "Strict"): [P.ProfileEntry(LONG, 0.0, 0.01)]}
+    return P.Profile(table=table, buckets=BUCKETS)
+
+
+def _serve(backend="dense", ssv=LONG, n=MAX_NEW):
+    return ServeConfig(max_new_tokens=n, temperature=0.0, max_context=256,
+                       ssv=ssv, use_planner=False, kv_backend=backend)
+
+
+@pytest.fixture(scope="module")
+def bk_pair():
+    tcfg = ModelConfig(name="bkgt", num_layers=2, d_model=64, num_heads=4,
+                       num_kv_heads=2, d_ff=128, vocab_size=64,
+                       max_seq_len=512, dtype="float32", attention="nsa",
+                       nsa=NSA)
+    dcfg = draft_lib.draft_config(tcfg, num_layers=1)
+    tp = model.init(jax.random.PRNGKey(0), tcfg)
+    dp = model.init(jax.random.PRNGKey(1), dcfg)
+    return tp, tcfg, dp, dcfg
+
+
+@pytest.fixture(scope="module")
+def bucket_reference(bk_pair):
+    """Greedy single-stream output per prompt UNDER ITS BUCKET STRATEGY —
+    the ground truth bucket-local serving must reproduce exactly."""
+    tp, tcfg, dp, dcfg = bk_pair
+    ref = []
+    for p in PROMPTS:
+        eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg,
+                                   _serve(ssv=_strategy_of(p)))
+        ref.append(eng.generate(p, max_new_tokens=MAX_NEW).tokens)
+    return ref
+
+
+def _random_requests(seed, max_arrival=6):
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(PROMPTS))
+    return [schedule_lib.Request(req_id=int(i), prompt=PROMPTS[int(i)],
+                                 arrival=float(rng.integers(0, max_arrival)))
+            for i in order]
+
+
+@pytest.mark.parametrize("slots,backend", [(1, "dense"), (2, "dense"),
+                                           (3, "paged"), (4, "paged")])
+def test_bucketed_token_equality(bk_pair, bucket_reference, slots, backend):
+    """Byte-identical tokens for every request under grouped serving: mixed
+    prompt lengths spanning both buckets, random arrival orders (mid-flight
+    admission), every slot count, both KV backends."""
+    tp, tcfg, dp, dcfg = bk_pair
+    eng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve(backend),
+                                      planner=P.BatchPlanner(_profile(),
+                                                             "Strict"))
+    reqs = _random_requests(seed=slots)
+    res = eng.serve_continuous(reqs, num_slots=slots, max_new_tokens=MAX_NEW)
+    assert len(res.results) == len(PROMPTS)
+    for req, gen in zip(res.requests, res.results):
+        np.testing.assert_array_equal(
+            bucket_reference[req.req_id], gen.tokens,
+            err_msg=f"request {req.req_id} diverged from single-stream under "
+                    f"its bucket strategy (slots={slots}, backend={backend})")
+    # the run really exercised mid-flight admission and bucket grouping
+    if slots < len(PROMPTS):
+        assert max(r.admitted_at for r in res.requests) > 0.0
+    assert all(r.finished_at is not None for r in res.requests)
+    assert res.group_launches >= res.steps
+    assert set(res.bucket_occupancy) == {0, 1}
+    assert all(0.0 < v <= 1.0 for v in res.bucket_occupancy.values())
+    # engine metrics carry the cache counters next to kv_cache_bytes
+    for key in ("step_cache_hits", "step_cache_misses", "verify_call_hits",
+                "verify_call_misses", "group_layout_hits",
+                "group_layout_misses"):
+        assert key in res.kernel_cache
+
+
+def test_warmup_precompiles_every_reachable_step(bk_pair):
+    """``warmup`` AOT-compiles (strategy x padded group size) up front; the
+    serve loop then never compiles — every launch is a step-cache hit."""
+    tp, tcfg, dp, dcfg = bk_pair
+    eng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve(),
+                                      planner=P.BatchPlanner(_profile(),
+                                                             "Strict"))
+    n = eng.warmup(num_slots=2)
+    assert n == 4                      # {SHORT, LONG} x group sizes {1, 2}
+    assert eng.step_cache.misses == n
+    res = eng.serve_continuous(_random_requests(seed=7), num_slots=2,
+                               max_new_tokens=MAX_NEW)
+    assert eng.step_cache.misses == n, "a group step compiled mid-serve"
+    assert eng.step_cache.hits >= res.group_launches
+    # warming again is free: everything already cached
+    assert eng.warmup(num_slots=2) == 0
+
+
+def test_bucketed_serving_requires_batch_planner(bk_pair):
+    tp, tcfg, dp, dcfg = bk_pair
+    eng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve())
+    with pytest.raises(ValueError, match="BatchPlanner"):
+        eng.serve_continuous([PROMPTS[0]], num_slots=2, bucketed=True)
+    with pytest.raises(ValueError, match="warmup"):
+        eng.serve_continuous([PROMPTS[0]], num_slots=2, warmup=True)
+    with pytest.raises(ValueError, match="BatchPlanner"):
+        eng.warmup(num_slots=2)
+    bp = P.BatchPlanner(_profile(), "Strict")
+    beng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve(),
+                                       planner=bp)
+    with pytest.raises(ValueError, match="bucketed"):
+        beng.serve_continuous([PROMPTS[0]], num_slots=2, bucketed=False)
+    with pytest.raises(ValueError, match="BatchedSSVEngine"):
+        engine_lib.SSVEngine(tp, tcfg, dp, dcfg, _serve(), planner=bp)
+    # the drain-entry API stays usable under a BatchPlanner: start() resets
+    # the per-bucket guards, step() demands an explicit strategy (there is
+    # no single batch-wide plan to fall back to)
+    beng.start([PROMPTS[0], PROMPTS[2]])
+    with pytest.raises(ValueError, match="strategy"):
+        beng.step(active=np.array([True, True]))
+    toks, n_acc = beng.step(active=np.array([True, True]), strategy=SHORT)
+    assert toks.shape[0] == 2 and n_acc.shape == (2,)
+
+
+def test_step_group_validates_rows(bk_pair):
+    tp, tcfg, dp, dcfg = bk_pair
+    eng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve())
+    eng.start_empty(2)
+    with pytest.raises(ValueError, match="empty"):
+        eng.step_group([], SHORT)
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.step_group([0, 0], SHORT)
+    with pytest.raises(ValueError, match="range"):
+        eng.step_group([2], SHORT)
+
+
+def test_step_group_leaves_other_rows_untouched(bk_pair):
+    """Group-step isolation: stepping rows {0, 1} under one strategy must
+    not change a single byte of row 2's KV, its device length, its pending
+    admission reset, or its host mirrors."""
+    tp, tcfg, dp, dcfg = bk_pair
+    eng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve())
+    eng.start_empty(3)
+    for slot in range(3):
+        eng.admit(slot, PROMPTS[slot])
+    row2_before = [np.asarray(a[:, 2]).copy()
+                   for a in jax.tree.leaves(eng.t_segs)]
+    len2 = int(eng.committed_len[2])
+    pending2 = int(eng.pending[2])
+    toks, n_acc = eng.step_group([0, 1], SHORT)
+    assert toks.shape[0] == 2 and n_acc.shape == (2,)
+    for b, a in zip(row2_before,
+                    [np.asarray(a[:, 2]) for a in jax.tree.leaves(eng.t_segs)]):
+        np.testing.assert_array_equal(b, a)
+    assert int(eng.committed_len[2]) == len2
+    assert int(eng.pending[2]) == pending2
+    assert bool(eng._admit_mask[2])          # row 2's admission reset intact
+    assert not eng._admit_mask[0] and not eng._admit_mask[1]   # consumed
+    assert int(eng.committed_len[0]) > len(PROMPTS[0]) - 1
+    assert int(eng.committed_len[1]) > len(PROMPTS[1]) - 1
+    # row 2 still steps correctly from its admitted state afterwards
+    eng.step_group([2], LONG)
+    assert int(eng.committed_len[2]) > len2
+    np.testing.assert_array_equal(np.asarray(eng.t_len), eng.committed_len)
+
+
+def test_group_layout_cache_memoizes_and_is_readonly():
+    """Satellite: ``overlap.group_queries`` is memoized by (T, C) — the
+    fused-verify prep layer calls it per layer per step — and hands out a
+    read-only array so callers cannot corrupt the shared copy."""
+    overlap.group_queries.cache_clear()
+    q1, pad1 = overlap.group_queries(7, 2)
+    q2, pad2 = overlap.group_queries(7, 2)
+    assert q1 is q2 and pad1 == pad2
+    info = overlap.group_queries.cache_info()
+    assert info.hits == 1 and info.misses == 1
+    assert not q1.flags.writeable
+    with pytest.raises(ValueError):
+        q1[0, 0] = 99
+    np.testing.assert_array_equal(q1[-1], [6, 6])       # clamped padding
+
+
+def test_kernel_cache_stats_exposed(bk_pair):
+    """Satellite: hit/miss counters of the kernel build cache and the layout
+    cache ride in engine metrics alongside kv_cache_bytes."""
+    from repro.kernels.nsa_verify import ops as nsa_ops
+    info = nsa_ops.verify_call_cache_info()
+    assert info.maxsize >= 1024
+    tp, tcfg, dp, dcfg = bk_pair
+    eng = engine_lib.SSVEngine(tp, tcfg, dp, dcfg, _serve())
+    stats = eng.kernel_cache_stats()
+    for key in ("verify_call_hits", "verify_call_misses",
+                "verify_call_cached", "group_layout_hits",
+                "group_layout_misses", "group_layout_cached"):
+        assert key in stats
+    assert eng.kv_cache_bytes() == 0      # not started — but both metrics
+    # coexist on the engine; the batched engine adds its step cache
+    beng = engine_lib.BatchedSSVEngine(tp, tcfg, dp, dcfg, _serve())
+    bstats = beng.kernel_cache_stats()
+    assert {"step_cache_hits", "step_cache_misses",
+            "step_cache_cached"} <= set(bstats)

@@ -86,3 +86,74 @@ def test_bucket_of():
 def test_default_schedule_alternates():
     s = P.default_schedule(8)
     assert s == (1, 3, 5, 7)
+
+
+# ---------------------------------------------------------------- BatchPlanner
+def _bucketed_profile(expected_accept=4.0):
+    """Two CPU-scale buckets with distinct ranked strategy lists."""
+    buckets = ((0, 32), (32, 4096))
+    mk = lambda D: SSVConfig(tree_depth=D, tree_width=2,
+                             precision_class="Strict")
+    table = {(0, "Strict"): [P.ProfileEntry(mk(1), expected_accept, 0.01),
+                             P.ProfileEntry(mk(2), expected_accept, 0.02)],
+             (1, "Strict"): [P.ProfileEntry(mk(3), expected_accept, 0.01),
+                             P.ProfileEntry(mk(4), expected_accept, 0.02)]}
+    return P.Profile(table=table, buckets=buckets)
+
+
+def test_batch_planner_plan_groups_by_bucket():
+    bp = P.BatchPlanner(_bucketed_profile(), "Strict")
+    groups = bp.plan({3: 1, 0: 0, 2: 1, 1: 0})
+    assert groups == [(0, [0, 1]), (1, [2, 3])]
+    assert bp.plan({2: 1}) == [(1, [2])]
+    assert bp.plan({}) == []
+
+
+def test_batch_planner_strategy_per_bucket():
+    bp = P.BatchPlanner(_bucketed_profile(), "Strict")
+    assert bp.bucket_of(10) == 0 and bp.bucket_of(100) == 1
+    assert bp.strategy_for(0).tree_depth == 1
+    assert bp.strategy_for(1).tree_depth == 3
+
+
+def test_batch_planner_guards_refine_independently():
+    """Sustained low acceptance in ONE bucket walks only that bucket's guard
+    to the next-ranked strategy — the other group's plan is untouched."""
+    bp = P.BatchPlanner(_bucketed_profile(expected_accept=4.0), "Strict")
+    for _ in range(P.WARMUP_M + P.HYSTERESIS_H):
+        bp.observe(0, accepted=0.0, latency_s=0.01)
+        bp.observe(1, accepted=4.0, latency_s=0.01)
+    assert bp.strategy_for(0).tree_depth == 2      # refined to rank 1
+    assert bp.strategy_for(1).tree_depth == 3      # still rank 0
+    assert bp.refinement_events == 1
+
+
+def test_batch_planner_begin_serve_resets_guards():
+    bp = P.BatchPlanner(_bucketed_profile(), "Strict")
+    for _ in range(P.WARMUP_M + P.HYSTERESIS_H):
+        bp.observe(0, accepted=0.0, latency_s=0.01)
+    assert bp.strategy_for(0).tree_depth == 2
+    bp.begin_serve()
+    assert bp.strategy_for(0).tree_depth == 1
+    assert bp.refinement_events == 0
+
+
+def test_batch_planner_rejects_uncovered_precision_class():
+    """A profile that cannot plan the requested class for every bucket is a
+    construction-time error, not a KeyError in the first serve round."""
+    with pytest.raises(ValueError, match="Approx-only"):
+        P.BatchPlanner(_bucketed_profile(), "Approx-only")
+    prof = _bucketed_profile()
+    del prof.table[(1, "Strict")]        # one bucket uncovered
+    with pytest.raises(ValueError, match=r"bucket\(s\) \[1\]"):
+        P.BatchPlanner(prof, "Strict")
+
+
+def test_batch_planner_reachable_strategies():
+    """The AOT warmup set: per bucket, the top rank plus every refinement
+    hop the guard can take (max_transitions), deduplicated."""
+    bp = P.BatchPlanner(_bucketed_profile(), "Strict")
+    reach = bp.reachable_strategies()
+    assert [s.tree_depth for s in reach] == [1, 2, 3, 4]
+    bp1 = P.BatchPlanner(_bucketed_profile(), "Strict", max_transitions=0)
+    assert [s.tree_depth for s in bp1.reachable_strategies()] == [1, 3]

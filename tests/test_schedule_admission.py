@@ -188,3 +188,69 @@ def test_poisson_arrivals_deterministic():
     np.testing.assert_array_equal(a, b)
     assert (np.diff(a) > 0).all()
     np.testing.assert_array_equal(S.poisson_arrivals(4, 0.0), np.zeros(4))
+
+
+# ------------------------------------------------- bucket-aware admission
+def _bucket_of(req):
+    """Context bucket by prompt length: short (< 8 tokens) = 0, long = 1."""
+    return 0 if len(req.prompt) < 8 else 1
+
+
+def _req(req_id, length, arrival=0.0):
+    return S.Request(req_id=req_id, prompt=np.arange(length), arrival=arrival)
+
+
+def test_bucket_policy_prefers_live_bucket():
+    """Filling a freed slot under policy='bucket' admits the earliest
+    arrived request whose bucket already has live rows — keeping execution
+    groups homogeneous — even when a different-bucket request arrived
+    earlier. Plain FIFO (the default) admits strictly by arrival."""
+    for policy, expect in (("bucket", [2, 1]), ("fifo", [1, 2])):
+        sched = S.Scheduler(2, bucket_of=_bucket_of, policy=policy)
+        sched.submit(_req(0, 4, arrival=0.0))            # short -> slot 0
+        [(s0, r0)] = sched.admit(0.0)
+        sched.mark_decoding(s0)
+        assert r0.req_id == 0
+        sched.submit(_req(1, 16, arrival=1.0))           # long, earlier
+        sched.submit(_req(2, 5, arrival=2.0))            # short, later
+        placed = sched.admit(2.0)
+        assert [r.req_id for _, r in placed] == [expect[0]]
+        sched.mark_decoding(placed[0][0])
+        # the next freed slot takes the remaining request either way
+        sched.finish(s0, 3.0)
+        sched.release(s0)
+        placed = sched.admit(3.0)
+        assert [r.req_id for _, r in placed] == [expect[1]]
+
+
+def test_bucket_policy_falls_back_to_fifo_head():
+    """No live-bucket match (or an empty batch): the FIFO head admits, so
+    new buckets open instead of starving."""
+    sched = S.Scheduler(2, bucket_of=_bucket_of, policy="bucket")
+    sched.submit(_req(0, 16, arrival=0.0))               # long into empty batch
+    [(s0, r0)] = sched.admit(0.0)
+    assert r0.req_id == 0
+    sched.mark_decoding(s0)
+    sched.submit(_req(1, 4, arrival=1.0))                # short: no live short
+    placed = sched.admit(1.0)
+    assert [r.req_id for _, r in placed] == [1]
+
+
+def test_bucket_occupancy_stats():
+    sched = S.Scheduler(4, bucket_of=_bucket_of, policy="bucket")
+    assert sched.bucket_occupancy() == {}
+    for i, length in enumerate((4, 5, 16)):
+        sched.submit(_req(i, length))
+    for slot, _ in sched.admit(0.0):
+        sched.mark_decoding(slot)
+    occ = sched.bucket_occupancy()
+    assert occ == {0: 0.5, 1: 0.25}
+    # no classifier -> no stats (and the default policy stays plain FIFO)
+    assert S.Scheduler(2).bucket_occupancy() == {}
+
+
+def test_bucket_policy_validation():
+    with pytest.raises(ValueError, match="bucket_of"):
+        S.Scheduler(2, policy="bucket")
+    with pytest.raises(ValueError, match="policy"):
+        S.Scheduler(2, policy="sjf")
